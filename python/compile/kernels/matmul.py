@@ -1,0 +1,165 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + activation.
+
+Every dense layer in every backbone routes through this kernel, so it is the
+MXU hot-spot of the whole stack. The TPU mapping (see DESIGN.md
+section Hardware-Adaptation):
+
+  * grid over (row-block i, col-block j); each step pulls an (bm, K) tile of
+    ``x`` and a (K, bn) tile of ``w`` HBM->VMEM via BlockSpec, multiplies on
+    the MXU with f32 accumulation, then fuses bias-add + activation in the
+    VPU before the single store back to HBM.
+  * K is kept whole inside a block: all K used by this model family are
+    <= 256, so an (128, 256) f32 tile is 128 KiB — far under the ~16 MiB
+    VMEM budget, and avoids a reduction-carry loop.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (still exercising the exact
+BlockSpec schedule). Real-TPU performance is estimated analytically in
+DESIGN.md / EXPERIMENTS.md section Perf via `vmem_bytes` / `mxu_utilization`
+below.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Activation tags understood by the fused epilogue.
+ACT_NONE = "none"
+ACT_RELU = "relu"
+ACT_PRELU = "prelu"
+
+# Default MXU-aligned tile sizes (128x128 systolic array).
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, alpha_ref, o_ref, *, act: str):
+    """One (bm, bn) output tile: MXU matmul + fused bias/activation."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if act == ACT_RELU:
+        acc = jnp.maximum(acc, 0.0)
+    elif act == ACT_PRELU:
+        a = alpha_ref[0]
+        acc = jnp.where(acc >= 0.0, acc, a * acc)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _block_sizes(m: int, n: int):
+    bm = BLOCK_M if m % BLOCK_M == 0 else m
+    bn = BLOCK_N if n % BLOCK_N == 0 else n
+    return bm, bn
+
+
+def _matmul_pallas(x, w, b, alpha, act: str):
+    """Raw pallas forward: ``act(x @ w + b)`` for one activation tag."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,), (b.shape, n)
+    assert alpha.shape == (1,), alpha.shape
+    bm, bn = _block_sizes(m, n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b, alpha)
+
+
+def _mm_plain(a, bmat):
+    """Pallas matmul with no epilogue — the building block of the backward
+    pass (dx = g @ w^T and dw = x^T @ g reuse the same MXU schedule)."""
+    k = a.shape[-1]
+    zero_b = jnp.zeros((bmat.shape[-1],), jnp.float32)
+    zero_a = jnp.zeros((1,), jnp.float32)
+    return _matmul_pallas(a, bmat, zero_b, zero_a, ACT_NONE)
+
+
+# Pallas interpret mode has no reverse-mode rule for pallas_call, so the
+# kernel carries an explicit custom_vjp whose backward pass is *also* built
+# from pallas matmuls (training is the hot path in GST, not inference).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def matmul_bias_act(x, w, b, alpha, act: str = ACT_NONE):
+    """``act(x @ w + b)`` with a PReLU slope ``alpha`` (shape (1,)).
+
+    x: (M, K) f32; w: (K, N) f32; b: (N,) f32; alpha: (1,) f32.
+    M and N must be divisible by the chosen block sizes (all dims in this
+    model family are powers of two or small enough to become one block).
+    """
+    return _matmul_pallas(x, w, b, alpha, act)
+
+
+def _mm_fwd(x, w, b, alpha, act):
+    # Residuals: inputs + pre-activation z. Keeping z is the classic
+    # activation-memory trade GST bounds by segment size.
+    z = _matmul_pallas(x, w, b, alpha, ACT_NONE)
+    if act == ACT_RELU:
+        y = jnp.maximum(z, 0.0)
+    elif act == ACT_PRELU:
+        y = jnp.where(z >= 0.0, z, alpha[0] * z)
+    else:
+        y = z
+    return y, (x, w, alpha, z)
+
+
+def _mm_bwd(act, res, g):
+    x, w, alpha, z = res
+    if act == ACT_RELU:
+        gz = g * (z > 0.0)
+        galpha = jnp.zeros((1,), jnp.float32)
+    elif act == ACT_PRELU:
+        gz = g * jnp.where(z >= 0.0, 1.0, alpha[0])
+        galpha = jnp.sum(g * jnp.where(z < 0.0, z, 0.0))[None]
+    else:
+        gz = g
+        galpha = jnp.zeros((1,), jnp.float32)
+    dx = _mm_plain(gz, w.T)  # (M, K)
+    dw = _mm_plain(x.T, gz)  # (K, N)
+    db = jnp.sum(gz, axis=0)
+    return dx, dw, db, galpha
+
+
+matmul_bias_act.defvjp(_mm_fwd, _mm_bwd)
+
+
+def linear(x, w, b, alpha=None, act: str = ACT_NONE):
+    """Rank-polymorphic wrapper: flattens leading dims into M."""
+    if alpha is None:
+        alpha = jnp.zeros((1,), jnp.float32)
+    lead = x.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    out = matmul_bias_act(x.reshape(m, x.shape[-1]), w, b, alpha, act)
+    return out.reshape(*lead, w.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Analytic TPU performance model (interpret=True wallclock is NOT a TPU
+# proxy; these estimates drive the section-Perf iteration).
+# ---------------------------------------------------------------------------
+
+def vmem_bytes(m: int, k: int, n: int) -> int:
+    """VMEM bytes resident for one grid step of the schedule above."""
+    bm, bn = _block_sizes(m, n)
+    return 4 * (bm * k + k * bn + bn + 1 + bm * bn)
+
+
+def mxu_utilization(m: int, k: int, n: int) -> float:
+    """Useful MACs / systolic-array MACs for one tile, assuming the 128x128
+    MXU processes ceil(bm/128)*ceil(bn/128)*ceil(k/128) passes."""
+    bm, bn = _block_sizes(m, n)
+    ceil = lambda a, q: -(-a // q)
+    passes = ceil(bm, 128) * ceil(bn, 128) * ceil(k, 128)
+    return (bm * bn * k) / (passes * 128 * 128 * 128)

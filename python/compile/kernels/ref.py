@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: python/tests/test_kernels.py sweeps
+shapes/dtypes with hypothesis and asserts allclose between each kernel and
+its oracle here. Keep these boring and obviously-correct — no pallas, no
+tiling, just textbook math.
+"""
+
+import jax.numpy as jnp
+
+_EPS = 1e-6
+
+
+def matmul_bias_act_ref(x, w, b, alpha, act: str = "none"):
+    out = x @ w + b[None, :]
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act == "prelu":
+        out = jnp.where(out >= 0.0, out, alpha[0] * out)
+    return out
+
+
+def adj_matmul_ref(adj, x):
+    return jnp.einsum("bij,bjf->bif", adj, x)
+
+
+def linear_attention_ref(q, k, v, mask):
+    q = jnp.maximum(q, 0.0) + _EPS
+    k = (jnp.maximum(k, 0.0) + _EPS) * mask[..., None]
+    v = v * mask[..., None]
+    kv = jnp.einsum("bnh,bnd->bhd", k, v)
+    ksum = jnp.sum(k, axis=1)
+    num = jnp.einsum("bnh,bhd->bnd", q, kv)
+    den = jnp.einsum("bnh,bh->bn", q, ksum) + _EPS
+    return num / den[..., None]

@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: batched segment message passing  out[b] = adj[b] @ x[b].
+
+This is the GST hardware adaptation in one kernel (DESIGN.md
+section Hardware-Adaptation): the paper's V100 implementation does edge-list
+gather + scatter-add with warp atomics; on TPU we *densify the per-segment
+normalized adjacency* and run it through the MXU. GST's bounded segment size
+(N <= 256 here) is exactly what makes this legal — an N x N f32 tile is at
+most 256 KiB, far under VMEM — and it converts irregular scatter traffic into
+a systolic matmul at full MXU occupancy.
+
+Schedule: grid over (segment b, row-block i). Each step stages
+  adj tile (1, bm, N)  +  x panel (1, N, F)  ->  out tile (1, bm, F)
+HBM->VMEM; the x panel index map ignores i, so consecutive row-blocks of the
+same segment reuse the resident panel (pipelined double-buffering on TPU).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 128
+
+
+def _adj_mm_kernel(adj_ref, x_ref, o_ref):
+    o_ref[0, ...] = jnp.dot(
+        adj_ref[0, ...], x_ref[0, ...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def bmm(a, b):
+    """Batched pallas matmul ``out[i] = a[i] @ b[i]`` — the shared schedule
+    behind the forward message passing and both of its backward products."""
+    bsz, m, k = a.shape
+    bsz2, k2, n = b.shape
+    assert bsz == bsz2 and k == k2, (a.shape, b.shape)
+    bm = BLOCK_ROWS if m % BLOCK_ROWS == 0 else m
+    grid = (bsz, m // bm)
+    return pl.pallas_call(
+        _adj_mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, k, n), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, n), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+# Reverse-mode rule: pallas_call has none in interpret mode, and message
+# passing sits inside every backbone layer, so the VJP is spelled out with
+# the same bmm schedule:  d(adj) = g x^T,  d(x) = adj^T g.
+@jax.custom_vjp
+def adj_matmul(adj, x):
+    """Batched dense message passing.
+
+    adj: (B, N, N) f32 — normalized segment adjacency (zero rows/cols on pad)
+    x:   (B, N, F) f32 — node features
+    returns (B, N, F) f32.
+    """
+    bsz, n, n2 = adj.shape
+    bsz2, n3, f = x.shape
+    assert n == n2 == n3 and bsz == bsz2, (adj.shape, x.shape)
+    return bmm(adj, x)
+
+
+def _adj_fwd(adj, x):
+    return adj_matmul(adj, x), (adj, x)
+
+
+def _adj_bwd(res, g):
+    adj, x = res
+    # Contract: the adjacency is *data* in GST (a normalized topology
+    # constant), never a trained quantity, so its cotangent is defined as
+    # zero. Computing the true d(adj) = g x^T would bury an extra N x N
+    # matmul inside an opaque interpret-mode while loop that XLA cannot
+    # DCE — measured at ~25% of grad_step's dots (EXPERIMENTS.md §Perf L2).
+    dadj = jnp.zeros_like(adj)
+    dx = bmm(jnp.swapaxes(adj, 1, 2), g)
+    return dadj, dx
+
+
+adj_matmul.defvjp(_adj_fwd, _adj_bwd)
+
+
+def vmem_bytes(n: int, f: int) -> int:
+    """Resident VMEM for one grid step (adj tile + x panel + out tile)."""
+    bm = BLOCK_ROWS if n % BLOCK_ROWS == 0 else n
+    return 4 * (bm * n + n * f + bm * f)
+
+
+def mxu_utilization(n: int, f: int) -> float:
+    """MACs used / MACs offered; F < 128 under-fills MXU columns, which is
+    the known cost of the densify strategy at small hidden dims."""
+    bm = BLOCK_ROWS if n % BLOCK_ROWS == 0 else n
+    ceil = lambda a, q: -(-a // q)
+    passes = ceil(bm, 128) * ceil(f, 128) * ceil(n, 128)
+    return (bm * f * n) / (passes * 128 * 128 * 128)

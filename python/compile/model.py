@@ -1,0 +1,440 @@
+"""L2: GST model definitions in JAX, calling the L1 Pallas kernels.
+
+This module defines, per variant (see config.VariantConfig):
+
+  backbones   gcn / sage / gps-lite  — per-node encoders over a padded
+              segment batch (B, N, F) with a dense normalized adjacency
+              (B, N, N) and a node mask (B, N)
+  heads       malnet: 2-layer MLP -> 5-way logits (this is F', the paper's
+              prediction head that +F finetunes);
+              tpu: per-node runtime head *inside* F, summed per segment —
+              the paper's section 5.3 design where F' is just summation
+  functions   embed_fwd / grad_step / full_step / apply_step /
+              head_grad_step / head_apply_step / predict — the exact set
+              the rust coordinator drives through PJRT (see DESIGN.md §1)
+
+Everything is shape-static so each function AOT-lowers to one HLO module.
+Parameters travel as a flat, name-sorted list of f32 arrays; the manifest
+written by aot.py records that order and the rust side never hardcodes it.
+
+GST semantics live here in miniature:
+
+  * ``grad_step`` backprops through exactly the sampled segment batch; the
+    stale aggregate enters as a plain input (a constant w.r.t. autodiff),
+    which is the whole memory story of the paper — activations for
+    non-sampled segments simply never exist.
+  * SED (Eq. 1) arrives pre-folded: rust passes ``eta_s`` (the up-weight of
+    the fresh segment) and ``stale_sum`` (the eta-weighted sum of kept stale
+    embeddings), so p never appears at this layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+from .config import VariantConfig
+
+# Number of segment slots in the full-graph (all-segments-backprop) step.
+# Graphs with more segments than this cannot run Full Graph Training — that
+# is the scaled analogue of the paper's 16 GB OOM boundary (see memory/).
+FULL_JMAX = 20
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (deterministic; numpy RNG seeded per variant)
+# ---------------------------------------------------------------------------
+
+def _glorot(rng, fan_in, fan_out):
+    limit = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return rng.uniform(-limit, limit, size=(fan_in, fan_out)).astype(np.float32)
+
+
+def init_params(cfg: VariantConfig, seed: int = 0):
+    """Build the parameter dict for a variant. Names sorted == wire order."""
+    rng = np.random.default_rng(seed)
+    p = {}
+    f, h, c = cfg.feat, cfg.hidden, cfg.classes
+
+    # pre-process layer (paper tbl. 5: 1 pre layer for gcn/sage; gps still
+    # needs an input projection F->H, so we keep it for all backbones).
+    p["pre_w"] = _glorot(rng, f, h)
+    p["pre_b"] = np.zeros((h,), np.float32)
+    p["pre_alpha"] = np.full((1,), 0.25, np.float32)
+
+    for i in range(cfg.mp_layers):
+        if cfg.backbone == "gcn":
+            p[f"conv{i}_w"] = _glorot(rng, h, h)
+            p[f"conv{i}_b"] = np.zeros((h,), np.float32)
+            p[f"conv{i}_alpha"] = np.full((1,), 0.25, np.float32)
+        elif cfg.backbone == "sage":
+            p[f"conv{i}_wself"] = _glorot(rng, h, h)
+            p[f"conv{i}_wneigh"] = _glorot(rng, h, h)
+            p[f"conv{i}_b"] = np.zeros((h,), np.float32)
+            p[f"conv{i}_alpha"] = np.full((1,), 0.25, np.float32)
+        elif cfg.backbone == "gps":
+            # local half: SAGE conv
+            p[f"conv{i}_wself"] = _glorot(rng, h, h)
+            p[f"conv{i}_wneigh"] = _glorot(rng, h, h)
+            p[f"conv{i}_b"] = np.zeros((h,), np.float32)
+            p[f"conv{i}_alpha"] = np.full((1,), 0.25, np.float32)
+            # global half: linear attention projections
+            for proj in ("q", "k", "v", "o"):
+                p[f"attn{i}_{proj}w"] = _glorot(rng, h, h)
+                p[f"attn{i}_{proj}b"] = np.zeros((h,), np.float32)
+            # feed-forward
+            p[f"ffn{i}_w1"] = _glorot(rng, h, 2 * h)
+            p[f"ffn{i}_b1"] = np.zeros((2 * h,), np.float32)
+            p[f"ffn{i}_w2"] = _glorot(rng, 2 * h, h)
+            p[f"ffn{i}_b2"] = np.zeros((h,), np.float32)
+        else:
+            raise ValueError(cfg.backbone)
+
+    # post-process layer (per-node, before pooling)
+    p["post_w"] = _glorot(rng, h, h)
+    p["post_b"] = np.zeros((h,), np.float32)
+    p["post_alpha"] = np.full((1,), 0.25, np.float32)
+
+    if cfg.dataset == "malnet":
+        # prediction head F' (finetuned by +F): MLP H -> H -> C
+        p["head_w1"] = _glorot(rng, h, h)
+        p["head_b1"] = np.zeros((h,), np.float32)
+        p["head_alpha"] = np.full((1,), 0.25, np.float32)
+        p["head_w2"] = _glorot(rng, h, c)
+        p["head_b2"] = np.zeros((c,), np.float32)
+    else:  # tpu: runtime head lives inside F (F' = sum), per paper sec. 5.3
+        p["rt_w1"] = _glorot(rng, h, h)
+        p["rt_b1"] = np.zeros((h,), np.float32)
+        p["rt_alpha"] = np.full((1,), 0.25, np.float32)
+        p["rt_w2"] = _glorot(rng, h, 1)
+        p["rt_b2"] = np.zeros((1,), np.float32)
+    return p
+
+
+def param_order(params):
+    return sorted(params.keys())
+
+
+def head_param_names(cfg: VariantConfig, params):
+    """Parameters belonging to the prediction head F' (the +F target)."""
+    if cfg.dataset != "malnet":
+        return []  # tpu: F' is a parameter-free summation (paper sec. 5.3)
+    return [k for k in param_order(params) if k.startswith("head_")]
+
+
+# ---------------------------------------------------------------------------
+# Backbones (per-node encoders). All return (B, N, H), masked.
+# ---------------------------------------------------------------------------
+
+def _prelu_linear(x, w, b, alpha):
+    return kernels.linear(x, w, b, alpha, act=kernels.ACT_PRELU)
+
+
+def _sage_conv(p, i, h, adj):
+    """GraphSAGE mean conv: prelu(h W_self + (D^-1 A h) W_neigh + b)."""
+    neigh = kernels.adj_matmul(adj, h)  # adj is row-mean normalized
+    z = (kernels.linear(h, p[f"conv{i}_wself"],
+                        jnp.zeros_like(p[f"conv{i}_b"]))
+         + kernels.linear(neigh, p[f"conv{i}_wneigh"], p[f"conv{i}_b"]))
+    a = p[f"conv{i}_alpha"][0]
+    return jnp.where(z >= 0.0, z, a * z)
+
+
+def _backbone_nodes(cfg, p, nodes, adj, mask):
+    """Shared per-node encoding: pre -> mp_layers convs -> post."""
+    h = _prelu_linear(nodes, p["pre_w"], p["pre_b"], p["pre_alpha"])
+    for i in range(cfg.mp_layers):
+        if cfg.backbone == "gcn":
+            agg = kernels.adj_matmul(adj, h)  # \hat{A} h  (sym + self loop)
+            h = _prelu_linear(agg, p[f"conv{i}_w"], p[f"conv{i}_b"],
+                              p[f"conv{i}_alpha"])
+        elif cfg.backbone == "sage":
+            h = _sage_conv(p, i, h, adj)
+        else:  # gps-lite: local SAGE conv + linear attention + FFN, residual
+            local = _sage_conv(p, i, h, adj)
+            h = h + local
+            q = kernels.linear(h, p[f"attn{i}_qw"], p[f"attn{i}_qb"])
+            k = kernels.linear(h, p[f"attn{i}_kw"], p[f"attn{i}_kb"])
+            v = kernels.linear(h, p[f"attn{i}_vw"], p[f"attn{i}_vb"])
+            att = kernels.linear_attention(q, k, v, mask)
+            h = h + kernels.linear(att, p[f"attn{i}_ow"], p[f"attn{i}_ob"])
+            ff = kernels.linear(h, p[f"ffn{i}_w1"], p[f"ffn{i}_b1"],
+                                act=kernels.ACT_RELU)
+            h = h + kernels.linear(ff, p[f"ffn{i}_w2"], p[f"ffn{i}_b2"])
+        h = h * mask[..., None]
+    h = _prelu_linear(h, p["post_w"], p["post_b"], p["post_alpha"])
+    return h * mask[..., None]
+
+
+def segment_embed(cfg, p, nodes, adj, mask):
+    """F(segment): the quantity stored in the historical table T.
+
+    malnet: masked-mean-pooled node embedding, shape (B, H)
+    tpu:    per-segment runtime contribution, shape (B, 1) — the per-node
+            runtime head is applied inside F and sum-pooled (paper sec. 5.3)
+    """
+    h = _backbone_nodes(cfg, p, nodes, adj, mask)
+    if cfg.dataset == "malnet":
+        denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+        return jnp.sum(h, axis=1) / denom  # (B, H)
+    r = _prelu_linear(h, p["rt_w1"], p["rt_b1"], p["rt_alpha"])
+    r = kernels.linear(r, p["rt_w2"], p["rt_b2"])[..., 0]  # (B, N)
+    return jnp.sum(r * mask, axis=1, keepdims=True)  # (B, 1)
+
+
+def head_logits(p, h_graph):
+    """F' for malnet: 2-layer MLP over the aggregated graph embedding."""
+    z = _prelu_linear(h_graph, p["head_w1"], p["head_b1"], p["head_alpha"])
+    return kernels.linear(z, p["head_w2"], p["head_b2"])  # (B, C)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def pairwise_hinge(yhat, pair_mask):
+    """Paper App. B: sum_{ij} I[y_i > y_j] max(0, 1 - (yhat_i - yhat_j)).
+
+    pair_mask[i, j] = 1 where y_i > y_j AND (i, j) are configs of the same
+    graph (rust builds it; ranking across different graphs is meaningless).
+    """
+    diff = yhat[:, None] - yhat[None, :]
+    loss = jnp.maximum(0.0, 1.0 - diff) * pair_mask
+    return jnp.sum(loss) / jnp.maximum(jnp.sum(pair_mask), 1.0)
+
+
+def l2_penalty(params, wd):
+    return wd * 0.5 * sum(jnp.sum(v * v) for v in params.values())
+
+
+# ---------------------------------------------------------------------------
+# AOT function set. Each builder returns (fn, input_specs, output_specs);
+# fn takes flat positional args in spec order. aot.py lowers each fn once
+# and records the specs in manifest.json — the rust wire format.
+# ---------------------------------------------------------------------------
+
+def _spec(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _param_specs(params, names=None):
+    names = names if names is not None else param_order(params)
+    return [_spec(f"param:{k}", params[k].shape) for k in names]
+
+
+def _split(args, n):
+    return list(args[:n]), list(args[n:])
+
+
+def _rebuild(names, flat):
+    return dict(zip(names, flat))
+
+
+def build_embed_fwd(cfg: VariantConfig, params):
+    names = param_order(params)
+    b, n, f = cfg.batch, cfg.max_nodes, cfg.feat
+    specs = _param_specs(params) + [
+        _spec("nodes", (b, n, f)),
+        _spec("adj", (b, n, n)),
+        _spec("mask", (b, n)),
+    ]
+
+    def fn(*args):
+        flat, (nodes, adj, mask) = _split(args, len(names))
+        p = _rebuild(names, flat)
+        return (segment_embed(cfg, p, nodes, adj, mask),)
+
+    table_dim = cfg.hidden if cfg.dataset == "malnet" else 1
+    outs = [_spec("h", (b, table_dim))]
+    return fn, specs, outs
+
+
+def build_grad_step(cfg: VariantConfig, params):
+    """One GST training step over a batch of sampled segments.
+
+    malnet aggregation (mean pooling over J segments, SED pre-folded):
+        h_graph = (eta_s * h_s + stale_sum) * inv_j
+    tpu aggregation (sum pooling, head inside F):
+        yhat = eta_s * r_s + stale_sum
+    """
+    names = param_order(params)
+    b, n, f, h = cfg.batch, cfg.max_nodes, cfg.feat, cfg.hidden
+    td = h if cfg.dataset == "malnet" else 1
+    specs = _param_specs(params) + [
+        _spec("nodes", (b, n, f)),
+        _spec("adj", (b, n, n)),
+        _spec("mask", (b, n)),
+        _spec("stale_sum", (b, td)),
+        _spec("eta_s", (b,)),
+        _spec("inv_j", (b,)),
+    ]
+    if cfg.dataset == "malnet":
+        specs.append(_spec("labels", (b,), "s32"))
+    else:
+        specs.append(_spec("pair_mask", (b, b)))
+    wd = cfg.opt.weight_decay
+
+    def fn(*args):
+        flat, data = _split(args, len(names))
+        nodes, adj, mask, stale_sum, eta_s, inv_j, target = data
+
+        def loss_fn(p):
+            hs = segment_embed(cfg, p, nodes, adj, mask)  # (B, td)
+            if cfg.dataset == "malnet":
+                h_graph = (eta_s[:, None] * hs + stale_sum) * inv_j[:, None]
+                task = cross_entropy(head_logits(p, h_graph), target)
+            else:
+                yhat = (eta_s[:, None] * hs + stale_sum)[:, 0]
+                task = pairwise_hinge(yhat, target)
+            return task + l2_penalty(p, wd), hs
+
+        p = _rebuild(names, flat)
+        (loss, hs), grads = jax.value_and_grad(loss_fn, has_aux=True)(p)
+        return (loss, *[grads[k] for k in names], hs)
+
+    outs = ([_spec("loss", ())] + [_spec(f"grad:{k}", params[k].shape)
+                                   for k in names] + [_spec("h_s", (b, td))])
+    return fn, specs, outs
+
+
+def build_full_step(cfg: VariantConfig, params):
+    """Full Graph Training step: backprop through ALL segments of one graph.
+
+    Memory grows with the number of live segment slots (FULL_JMAX), which is
+    why this exists only as the baseline — the paper's OOM rows fall out of
+    the memory model when J exceeds the budget. malnet only (the tpu
+    pairwise loss needs multiple graphs per step and is OOM in the paper
+    anyway).
+    """
+    assert cfg.dataset == "malnet"
+    names = param_order(params)
+    jm, n, f = FULL_JMAX, cfg.max_nodes, cfg.feat
+    specs = _param_specs(params) + [
+        _spec("nodes", (jm, n, f)),
+        _spec("adj", (jm, n, n)),
+        _spec("mask", (jm, n)),
+        _spec("seg_mask", (jm,)),
+        _spec("labels", (1,), "s32"),
+    ]
+    wd = cfg.opt.weight_decay
+
+    def fn(*args):
+        flat, (nodes, adj, mask, seg_mask, labels) = _split(args, len(names))
+
+        def loss_fn(p):
+            hs = segment_embed(cfg, p, nodes, adj, mask)  # (Jm, H)
+            denom = jnp.maximum(jnp.sum(seg_mask), 1.0)
+            h_graph = (jnp.sum(hs * seg_mask[:, None], axis=0) / denom)[None]
+            task = cross_entropy(head_logits(p, h_graph), labels)
+            return task + l2_penalty(p, wd), hs
+
+        p = _rebuild(names, flat)
+        (loss, hs), grads = jax.value_and_grad(loss_fn, has_aux=True)(p)
+        return (loss, *[grads[k] for k in names], hs)
+
+    outs = ([_spec("loss", ())] + [_spec(f"grad:{k}", params[k].shape)
+                                   for k in names]
+            + [_spec("h_all", (jm, cfg.hidden))])
+    return fn, specs, outs
+
+
+def _adam(p, m, v, g, t, lr, opt):
+    m2 = opt.beta1 * m + (1.0 - opt.beta1) * g
+    v2 = opt.beta2 * v + (1.0 - opt.beta2) * g * g
+    mhat = m2 / (1.0 - jnp.power(opt.beta1, t))
+    vhat = v2 / (1.0 - jnp.power(opt.beta2, t))
+    return p - lr * mhat / (jnp.sqrt(vhat) + opt.eps), m2, v2
+
+
+def build_apply_step(cfg: VariantConfig, params, names=None):
+    """Adam update over (a subset of) parameters. L3 averages grads across
+    data-parallel workers / accumulates over S segments, then calls this
+    once — that separation is what makes S>1 and multi-GPU simulation free.
+    """
+    names = names if names is not None else param_order(params)
+    specs = ([_spec(f"param:{k}", params[k].shape) for k in names]
+             + [_spec(f"m:{k}", params[k].shape) for k in names]
+             + [_spec(f"v:{k}", params[k].shape) for k in names]
+             + [_spec(f"grad:{k}", params[k].shape) for k in names]
+             + [_spec("t", ()), _spec("lr", ())])
+    opt = cfg.opt
+
+    def fn(*args):
+        k = len(names)
+        ps, ms, vs, gs = (args[:k], args[k:2 * k], args[2 * k:3 * k],
+                          args[3 * k:4 * k])
+        t, lr = args[4 * k], args[4 * k + 1]
+        outs = [_adam(p, m, v, g, t, lr, opt)
+                for p, m, v, g in zip(ps, ms, vs, gs)]
+        return (tuple(o[0] for o in outs) + tuple(o[1] for o in outs)
+                + tuple(o[2] for o in outs))
+
+    outs = ([_spec(f"param:{k}", params[k].shape) for k in names]
+            + [_spec(f"m:{k}", params[k].shape) for k in names]
+            + [_spec(f"v:{k}", params[k].shape) for k in names])
+    return fn, specs, outs
+
+
+def build_head_grad_step(cfg: VariantConfig, params):
+    """+F finetuning: grads of the CE loss w.r.t. head params only, with all
+    segment embeddings served up-to-date from the table (Alg. 2, lines 11+).
+    """
+    assert cfg.dataset == "malnet"
+    hnames = head_param_names(cfg, params)
+    b, h = cfg.batch, cfg.hidden
+    specs = ([_spec(f"param:{k}", params[k].shape) for k in hnames]
+             + [_spec("h_graph", (b, h)), _spec("labels", (b,), "s32")])
+    wd = cfg.opt.weight_decay
+
+    def fn(*args):
+        flat, (h_graph, labels) = _split(args, len(hnames))
+
+        def loss_fn(hp):
+            task = cross_entropy(head_logits(hp, h_graph), labels)
+            return task + l2_penalty(hp, wd)
+
+        hp = _rebuild(hnames, flat)
+        loss, grads = jax.value_and_grad(loss_fn)(hp)
+        return (loss, *[grads[k] for k in hnames])
+
+    outs = [_spec("loss", ())] + [_spec(f"grad:{k}", params[k].shape)
+                                  for k in hnames]
+    return fn, specs, outs
+
+
+def build_predict(cfg: VariantConfig, params):
+    """Eval-time F' over an aggregated graph embedding."""
+    assert cfg.dataset == "malnet"
+    hnames = head_param_names(cfg, params)
+    b, h = cfg.batch, cfg.hidden
+    specs = ([_spec(f"param:{k}", params[k].shape) for k in hnames]
+             + [_spec("h_graph", (b, h))])
+
+    def fn(*args):
+        flat, (h_graph,) = _split(args, len(hnames))
+        return (head_logits(_rebuild(hnames, flat), h_graph),)
+
+    outs = [_spec("logits", (b, cfg.classes))]
+    return fn, specs, outs
+
+
+def function_set(cfg: VariantConfig, params):
+    """All AOT targets for a variant, name -> (fn, in_specs, out_specs)."""
+    fns = {
+        "embed_fwd": build_embed_fwd(cfg, params),
+        "grad_step": build_grad_step(cfg, params),
+        "apply_step": build_apply_step(cfg, params),
+    }
+    if cfg.dataset == "malnet":
+        fns["full_step"] = build_full_step(cfg, params)
+        fns["head_grad_step"] = build_head_grad_step(cfg, params)
+        fns["head_apply_step"] = build_apply_step(
+            cfg, params, names=head_param_names(cfg, params))
+        fns["predict"] = build_predict(cfg, params)
+    return fns

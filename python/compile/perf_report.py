@@ -1,0 +1,103 @@
+"""Section-Perf analysis: L1 analytic TPU estimates + L2 HLO audit.
+
+interpret=True pallas gives CPU-numpy timings only, so L1 TPU performance
+is *estimated* from the BlockSpec schedules (VMEM residency, MXU pass
+utilization) — see DESIGN.md §7. The L2 audit parses the lowered HLO text
+and counts the expensive ops, catching recomputation regressions (e.g. the
+backbone being traced twice into grad_step).
+
+Usage: python -m compile.perf_report [--artifacts DIR]
+"""
+
+import argparse
+import os
+import re
+
+from .config import default_variants
+from .kernels import attention, matmul, spmm
+
+VMEM_BUDGET = 16 * 1024 * 1024  # v3 VMEM per core
+
+
+def l1_report(cfg):
+    """Per-kernel VMEM + MXU estimates at a variant's shapes."""
+    b, n, f, h = cfg.batch, cfg.max_nodes, cfg.feat, cfg.hidden
+    rows = []
+    # dense layers: (B*N, F->H) and (B*N, H->H)
+    for (name, m, k, nn) in [
+        (f"linear {f}->{h}", b * n, f, h),
+        (f"linear {h}->{h}", b * n, h, h),
+    ]:
+        rows.append((
+            f"matmul_bias_act {name}",
+            matmul.vmem_bytes(m, k, nn),
+            matmul.mxu_utilization(m, k, nn),
+        ))
+    rows.append((
+        f"adj_matmul N={n} F={h}",
+        spmm.vmem_bytes(n, h),
+        spmm.mxu_utilization(n, h),
+    ))
+    if cfg.backbone == "gps":
+        rows.append((
+            f"linear_attention N={n} H={h}",
+            attention.vmem_bytes(n, h),
+            float("nan"),
+        ))
+    return rows
+
+
+_OPS = ("dot(", "dot_general", "convolution(", "while(", "custom-call")
+
+
+def hlo_op_counts(path):
+    text = open(path).read()
+    counts = {}
+    counts["dot"] = len(re.findall(r"= f32\[[\d,]*\][^=]* dot\(", text))
+    counts["while"] = text.count(" while(")
+    counts["fusion"] = text.count(" fusion(")
+    counts["custom-call"] = text.count("custom-call")
+    counts["bytes"] = len(text)
+    return counts
+
+
+def l2_audit(artifacts, variant):
+    """grad_step must contain ~2x the dots of embed_fwd (fwd+bwd), not 3x+
+    (which would mean XLA re-traced the forward)."""
+    vdir = os.path.join(artifacts, variant)
+    out = {}
+    for fn in ("embed_fwd", "grad_step"):
+        p = os.path.join(vdir, f"{fn}.hlo.txt")
+        if os.path.isfile(p):
+            out[fn] = hlo_op_counts(p)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args(argv)
+    for cfg in default_variants():
+        print(f"\n== {cfg.name}")
+        print("  L1 analytic estimates (BlockSpec schedules):")
+        for (name, vmem, util) in l1_report(cfg):
+            ok = "ok" if vmem < VMEM_BUDGET else "OVER"
+            print(f"    {name:<34} vmem {vmem/1024:>8.0f} KiB [{ok}]"
+                  f"  mxu-util {util:>6.1%}" if util == util else
+                  f"    {name:<34} vmem {vmem/1024:>8.0f} KiB [{ok}]")
+        audit = l2_audit(args.artifacts, cfg.name)
+        if audit:
+            print("  L2 HLO audit:")
+            for fn, c in audit.items():
+                print(f"    {fn:<12} dots={c['dot']:<4} while={c['while']:<3}"
+                      f" fusions={c['fusion']:<4} "
+                      f"custom-calls={c['custom-call']}")
+            if "embed_fwd" in audit and "grad_step" in audit:
+                ratio = (audit["grad_step"]["dot"]
+                         / max(1, audit["embed_fwd"]["dot"]))
+                flag = "ok" if ratio <= 3.05 else "RECOMPUTATION?"
+                print(f"    grad/embed dot ratio = {ratio:.2f} [{flag}]")
+
+
+if __name__ == "__main__":
+    main()

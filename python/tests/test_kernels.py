@@ -1,0 +1,221 @@
+"""L1 kernel correctness: pallas vs pure-jnp oracle, hypothesis-swept.
+
+This is the core correctness signal for the compute layer: every kernel is
+checked forward AND backward (via the custom_vjp) against kernels/ref.py
+across randomized shapes, activation tags, masks and magnitudes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SET = settings(max_examples=20, deadline=None)
+
+
+def _arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(scale=scale, size=shape).astype(np.float32))
+
+
+# -- matmul_bias_act --------------------------------------------------------
+
+@SET
+@given(
+    m=st.sampled_from([1, 8, 64, 128, 256, 384]),
+    k=st.sampled_from([1, 16, 64, 256]),
+    n=st.sampled_from([1, 5, 64, 128, 256]),
+    act=st.sampled_from(["none", "relu", "prelu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_forward(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, (m, k)), _arr(rng, (k, n))
+    b, a = _arr(rng, (n,)), jnp.asarray([0.25], jnp.float32)
+    got = kernels.matmul_bias_act(x, w, b, a, act)
+    want = ref.matmul_bias_act_ref(x, w, b, a, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(
+    m=st.sampled_from([8, 128, 256]),
+    k=st.sampled_from([16, 64]),
+    n=st.sampled_from([5, 64, 128]),
+    act=st.sampled_from(["none", "relu", "prelu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_gradients(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    args = (_arr(rng, (m, k)), _arr(rng, (k, n)), _arr(rng, (n,)),
+            jnp.asarray([0.25], jnp.float32))
+
+    def lk(t):
+        return jnp.sum(jnp.sin(kernels.matmul_bias_act(*t, act)))
+
+    def lr(t):
+        return jnp.sum(jnp.sin(ref.matmul_bias_act_ref(*t, act)))
+
+    for got, want in zip(jax.grad(lk)(args), jax.grad(lr)(args)):
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_matmul_relu_clamps_negative():
+    x = jnp.asarray([[-1.0, 1.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    out = kernels.matmul_bias_act(x, w, jnp.zeros(2), jnp.zeros(1), "relu")
+    assert float(out[0, 0]) == 0.0 and float(out[0, 1]) == 1.0
+
+
+def test_matmul_prelu_uses_alpha():
+    x = jnp.asarray([[-2.0]], jnp.float32)
+    w = jnp.ones((1, 1), jnp.float32)
+    out = kernels.matmul_bias_act(
+        x, w, jnp.zeros(1), jnp.asarray([0.5], jnp.float32), "prelu")
+    assert float(out[0, 0]) == pytest.approx(-1.0)
+
+
+def test_matmul_shape_mismatch_raises():
+    with pytest.raises(AssertionError):
+        kernels.matmul_bias_act(
+            jnp.zeros((4, 3)), jnp.zeros((2, 5)), jnp.zeros(5),
+            jnp.zeros(1), "none")
+
+
+# -- adj_matmul (message passing) ------------------------------------------
+
+@SET
+@given(
+    bsz=st.sampled_from([1, 3, 8]),
+    n=st.sampled_from([1, 16, 64, 128, 256]),
+    f=st.sampled_from([1, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adj_matmul_forward(bsz, n, f, seed):
+    rng = np.random.default_rng(seed)
+    adj, x = _arr(rng, (bsz, n, n)), _arr(rng, (bsz, n, f))
+    np.testing.assert_allclose(
+        kernels.adj_matmul(adj, x), ref.adj_matmul_ref(adj, x),
+        rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(
+    bsz=st.sampled_from([1, 4]),
+    n=st.sampled_from([16, 128]),
+    f=st.sampled_from([8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adj_matmul_feature_gradients(bsz, n, f, seed):
+    """d(x) must match the reference; d(adj) is zero BY CONTRACT — the
+    adjacency is data in GST, and computing its true cotangent costs an
+    un-DCE-able matmul inside the interpret-mode while loop (§Perf L2)."""
+    rng = np.random.default_rng(seed)
+    adj, x = _arr(rng, (bsz, n, n), 0.3), _arr(rng, (bsz, n, f), 0.3)
+    gx = jax.grad(lambda t: jnp.sum(jnp.tanh(kernels.adj_matmul(adj, t))))(x)
+    rx = jax.grad(lambda t: jnp.sum(jnp.tanh(ref.adj_matmul_ref(adj, t))))(x)
+    np.testing.assert_allclose(gx, rx, rtol=2e-3, atol=2e-3)
+    gadj = jax.grad(
+        lambda a: jnp.sum(jnp.tanh(kernels.adj_matmul(a, x))))(adj)
+    assert float(jnp.abs(gadj).max()) == 0.0
+
+
+def test_adj_matmul_zero_adjacency_is_zero():
+    out = kernels.adj_matmul(jnp.zeros((2, 8, 8)), jnp.ones((2, 8, 4)))
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_adj_matmul_identity_preserves_features():
+    x = jnp.arange(32, dtype=jnp.float32).reshape(1, 8, 4)
+    eye = jnp.eye(8, dtype=jnp.float32)[None]
+    np.testing.assert_allclose(kernels.adj_matmul(eye, x), x, rtol=1e-6)
+
+
+# -- linear attention --------------------------------------------------------
+
+@SET
+@given(
+    bsz=st.sampled_from([1, 2, 8]),
+    n=st.sampled_from([4, 64, 128]),
+    h=st.sampled_from([8, 32, 64]),
+    frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linattn_forward(bsz, n, h, frac, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_arr(rng, (bsz, n, h)) for _ in range(3))
+    mask = jnp.asarray(
+        (rng.uniform(size=(bsz, n)) < frac).astype(np.float32))
+    np.testing.assert_allclose(
+        kernels.linear_attention(q, k, v, mask),
+        ref.linear_attention_ref(q, k, v, mask), rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(
+    bsz=st.sampled_from([1, 2]),
+    n=st.sampled_from([16, 64]),
+    h=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linattn_gradients(bsz, n, h, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_arr(rng, (bsz, n, h)) for _ in range(3))
+    mask = jnp.asarray(rng.integers(0, 2, (bsz, n)).astype(np.float32))
+    gk = jax.grad(
+        lambda t: jnp.sum(jnp.tanh(kernels.linear_attention(*t, mask))))(
+            (q, k, v))
+    gr = jax.grad(
+        lambda t: jnp.sum(jnp.tanh(ref.linear_attention_ref(*t, mask))))(
+            (q, k, v))
+    for got, want in zip(gk, gr):
+        np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+
+def test_linattn_masked_keys_do_not_contribute():
+    """Changing k/v at masked positions must not change the output."""
+    rng = np.random.default_rng(7)
+    q, k, v = (_arr(rng, (1, 16, 8)) for _ in range(3))
+    mask = jnp.asarray([[1.0] * 8 + [0.0] * 8])
+    out1 = kernels.linear_attention(q, k, v, mask)
+    k2 = k.at[:, 8:].set(99.0)
+    v2 = v.at[:, 8:].set(-99.0)
+    out2 = kernels.linear_attention(q, k2, v2, mask)
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)
+
+
+def test_linattn_rows_are_convex_mixtures():
+    """With phi >= 0, each output row is a weighted average of values."""
+    rng = np.random.default_rng(3)
+    q, k = (_arr(rng, (1, 32, 8)) for _ in range(2))
+    v = jnp.asarray(rng.uniform(2.0, 3.0, (1, 32, 8)).astype(np.float32))
+    mask = jnp.ones((1, 32), jnp.float32)
+    out = kernels.linear_attention(q, k, v, mask)
+    assert float(out.min()) >= 1.9 and float(out.max()) <= 3.1
+
+
+# -- analytic perf model sanity ---------------------------------------------
+
+def test_vmem_models_fit_budget():
+    """Every BlockSpec this model family emits must fit TPU VMEM (16 MiB)."""
+    from compile.kernels import attention, matmul, spmm
+    budget = 16 * 1024 * 1024
+    for (m, k, n) in [(1024, 256, 128), (2048, 64, 128), (128, 64, 5)]:
+        assert matmul.vmem_bytes(m, k, n) < budget
+    for (n, f) in [(128, 64), (256, 64), (512, 128)]:
+        assert spmm.vmem_bytes(n, f) < budget
+    for (n, h) in [(128, 64), (256, 64)]:
+        assert attention.vmem_bytes(n, h) < budget
+
+
+def test_mxu_utilization_bounds():
+    from compile.kernels import matmul, spmm
+    for (m, k, n) in [(1024, 64, 128), (128, 64, 64)]:
+        u = matmul.mxu_utilization(m, k, n)
+        assert 0.0 < u <= 1.0
+    assert spmm.mxu_utilization(128, 64) == pytest.approx(0.5)

@@ -1,0 +1,246 @@
+"""L2 model semantics: shapes, masking, losses, Adam, GST aggregation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import OptConfig, VariantConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFGS = {
+    "gcn": VariantConfig("malnet", "gcn", max_nodes=32, batch=2),
+    "sage": VariantConfig("malnet", "sage", max_nodes=32, batch=2),
+    "gps": VariantConfig("malnet", "gps", max_nodes=32, batch=2, mp_layers=2),
+    "tpu": VariantConfig("tpu", "sage", max_nodes=32, batch=4, feat=24),
+}
+
+
+def _batch(cfg, seed=0, bsz=None):
+    rng = np.random.default_rng(seed)
+    b = bsz or cfg.batch
+    n, f = cfg.max_nodes, cfg.feat
+    nodes = rng.normal(scale=0.3, size=(b, n, f)).astype(np.float32)
+    adj = rng.uniform(size=(b, n, n)).astype(np.float32) * 0.1
+    mask = np.zeros((b, n), np.float32)
+    for i in range(b):
+        k = rng.integers(4, n)
+        mask[i, :k] = 1.0
+        nodes[i, k:] = 0.0
+        adj[i, k:, :] = 0.0
+        adj[i, :, k:] = 0.0
+    return jnp.asarray(nodes), jnp.asarray(adj), jnp.asarray(mask)
+
+
+# -- parameters ---------------------------------------------------------------
+
+@pytest.mark.parametrize("key", list(CFGS))
+def test_init_params_deterministic(key):
+    cfg = CFGS[key]
+    p1, p2 = model.init_params(cfg, seed=0), model.init_params(cfg, seed=0)
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])
+
+
+def test_head_params_are_malnet_only():
+    p = model.init_params(CFGS["sage"])
+    hn = model.head_param_names(CFGS["sage"], p)
+    assert hn == ["head_alpha", "head_b1", "head_b2", "head_w1", "head_w2"]
+    pt = model.init_params(CFGS["tpu"])
+    assert model.head_param_names(CFGS["tpu"], pt) == []
+
+
+# -- embeddings ---------------------------------------------------------------
+
+@pytest.mark.parametrize("key", ["gcn", "sage", "gps"])
+def test_segment_embed_shape_and_mask_invariance(key):
+    """Padded-node features must not influence the segment embedding."""
+    cfg = CFGS[key]
+    p = model.init_params(cfg)
+    nodes, adj, mask = _batch(cfg)
+    h1 = model.segment_embed(cfg, p, nodes, adj, mask)
+    assert h1.shape == (cfg.batch, cfg.hidden)
+    noise = jnp.asarray(
+        np.random.default_rng(9).normal(size=nodes.shape).astype(np.float32))
+    nodes2 = nodes + noise * (1.0 - mask[..., None])
+    h2 = model.segment_embed(cfg, p, nodes2, adj, mask)
+    np.testing.assert_allclose(h1, h2, rtol=1e-4, atol=1e-5)
+
+
+def test_tpu_segment_embed_is_scalar_runtime():
+    cfg = CFGS["tpu"]
+    p = model.init_params(cfg)
+    nodes, adj, mask = _batch(cfg)
+    r = model.segment_embed(cfg, p, nodes, adj, mask)
+    assert r.shape == (cfg.batch, 1)
+
+
+# -- losses -------------------------------------------------------------------
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0, 0.0], [0.0, 3.0, 0.0]])
+    labels = jnp.asarray([0, 1], jnp.int32)
+    got = model.cross_entropy(logits, labels)
+    want = np.mean([-2.0 + np.log(np.exp(2) + 2), -3.0 + np.log(np.exp(3) + 2)])
+    assert float(got) == pytest.approx(float(want), rel=1e-5)
+
+
+def test_pairwise_hinge_perfect_ranking_is_zero():
+    yhat = jnp.asarray([3.0, 1.0, 5.0, 2.0])
+    pm = np.zeros((4, 4), np.float32)
+    # y order equals yhat order, margins > 1 => zero loss
+    pm[2, 0] = pm[0, 1] = pm[2, 1] = 1.0
+    assert float(model.pairwise_hinge(yhat, jnp.asarray(pm))) == 0.0
+
+
+def test_pairwise_hinge_penalizes_inversions():
+    yhat = jnp.asarray([0.0, 1.0])
+    pm = jnp.asarray([[0.0, 1.0], [0.0, 0.0]])  # y_0 > y_1 but yhat_0 < yhat_1
+    assert float(model.pairwise_hinge(yhat, pm)) == pytest.approx(2.0)
+
+
+def test_pairwise_hinge_empty_mask_is_zero():
+    assert float(model.pairwise_hinge(jnp.zeros(3), jnp.zeros((3, 3)))) == 0.0
+
+
+# -- GST aggregation semantics -------------------------------------------------
+
+def test_grad_step_matches_full_step_when_single_segment():
+    """A graph with J=1, eta_s=1, stale_sum=0 must equal full-graph math."""
+    cfg = CFGS["sage"]
+    p = model.init_params(cfg)
+    fn_g, in_g, _ = model.build_grad_step(cfg, p)
+    names = model.param_order(p)
+    nodes, adj, mask = _batch(cfg)
+    labels = jnp.asarray([1, 3], jnp.int32)
+    stale = jnp.zeros((cfg.batch, cfg.hidden))
+    eta = jnp.ones((cfg.batch,))
+    invj = jnp.ones((cfg.batch,))
+    outs = fn_g(*[p[k] for k in names], nodes, adj, mask, stale, eta, invj,
+                labels)
+    loss = outs[0]
+    # manual: embed -> head -> CE + l2
+    h = model.segment_embed(cfg, p, nodes, adj, mask)
+    want = model.cross_entropy(model.head_logits(p, h), labels) \
+        + model.l2_penalty(p, cfg.opt.weight_decay)
+    assert float(loss) == pytest.approx(float(want), rel=1e-5)
+    h_s = outs[-1]
+    np.testing.assert_allclose(h_s, h, rtol=1e-5, atol=1e-6)
+
+
+def test_grad_step_stale_sum_gets_no_gradient():
+    """Gradient must flow only through the sampled segment: scaling the
+    backbone's stale contribution must leave grads w.r.t. stale_sum zero
+    (it is an input, not a traced param)."""
+    cfg = CFGS["sage"]
+    p = model.init_params(cfg)
+    names = model.param_order(p)
+    fn_g, _, _ = model.build_grad_step(cfg, p)
+    nodes, adj, mask = _batch(cfg)
+    labels = jnp.asarray([0, 2], jnp.int32)
+    stale = jnp.ones((cfg.batch, cfg.hidden)) * 0.3
+    eta = jnp.full((cfg.batch,), 1.5)
+    invj = jnp.full((cfg.batch,), 0.25)
+    outs = fn_g(*[p[k] for k in names], nodes, adj, mask, stale, eta, invj,
+                labels)
+    grads = outs[1:-1]
+    assert len(grads) == len(names)
+    assert all(np.isfinite(np.asarray(g)).all() for g in grads)
+
+
+def test_full_step_seg_mask_ignores_empty_slots():
+    cfg = CFGS["sage"]
+    p = model.init_params(cfg)
+    names = model.param_order(p)
+    fn, _, _ = model.build_full_step(cfg, p)
+    jm, n, f = model.FULL_JMAX, cfg.max_nodes, cfg.feat
+    rng = np.random.default_rng(0)
+    nodes = jnp.asarray(rng.normal(size=(jm, n, f)).astype(np.float32))
+    adj = jnp.asarray(rng.uniform(size=(jm, n, n)).astype(np.float32) * 0.1)
+    mask = jnp.ones((jm, n))
+    seg1 = jnp.asarray([1.0, 1.0] + [0.0] * (jm - 2))
+    labels = jnp.asarray([2], jnp.int32)
+    args = [p[k] for k in names]
+    loss1 = fn(*args, nodes, adj, mask, seg1, labels)[0]
+    # scribble on the masked-out slots; loss must not change
+    nodes2 = nodes.at[2:].set(99.0)
+    loss2 = fn(*args, nodes2, adj, mask, seg1, labels)[0]
+    assert float(loss1) == pytest.approx(float(loss2), rel=1e-6)
+
+
+# -- optimizer ----------------------------------------------------------------
+
+def test_apply_step_is_adam():
+    cfg = VariantConfig("malnet", "sage", max_nodes=32, batch=2,
+                        opt=OptConfig(lr=0.1))
+    p = {"w": np.ones((3,), np.float32)}
+    fn, _, _ = model.build_apply_step(cfg, p)
+    g = jnp.asarray([1.0, -1.0, 0.0])
+    zeros = jnp.zeros(3)
+    outs = fn(jnp.ones(3), zeros, zeros, g, jnp.asarray(1.0),
+              jnp.asarray(0.1))
+    p2, m2, v2 = outs
+    # bias-corrected first step: update = lr * sign(g) (eps-perturbed)
+    np.testing.assert_allclose(p2, [0.9, 1.1, 1.0], rtol=1e-4)
+    np.testing.assert_allclose(m2, 0.1 * g, rtol=1e-6)
+    np.testing.assert_allclose(v2, 0.001 * g * g, rtol=1e-5)
+
+
+def test_apply_step_converges_on_quadratic():
+    cfg = CFGS["sage"]
+    p = {"w": np.asarray([5.0], np.float32)}
+    fn, _, _ = model.build_apply_step(cfg, p)
+    w = jnp.asarray([5.0])
+    m = v = jnp.zeros(1)
+    for t in range(1, 200):
+        g = 2.0 * w  # d/dw w^2
+        w, m, v = fn(w, m, v, g, jnp.asarray(float(t)), jnp.asarray(0.1))
+    assert abs(float(w[0])) < 0.2
+
+
+# -- head finetuning ----------------------------------------------------------
+
+def test_head_grad_step_only_touches_head():
+    cfg = CFGS["sage"]
+    p = model.init_params(cfg)
+    fn, in_specs, out_specs = model.build_head_grad_step(cfg, p)
+    hnames = model.head_param_names(cfg, p)
+    assert len(in_specs) == len(hnames) + 2
+    h = jnp.asarray(np.random.default_rng(0)
+                    .normal(size=(cfg.batch, cfg.hidden)).astype(np.float32))
+    labels = jnp.asarray([0, 4], jnp.int32)
+    outs = fn(*[p[k] for k in hnames], h, labels)
+    assert len(outs) == 1 + len(hnames)
+    assert np.isfinite(float(outs[0]))
+
+
+def test_predict_matches_head_logits():
+    cfg = CFGS["sage"]
+    p = model.init_params(cfg)
+    fn, _, _ = model.build_predict(cfg, p)
+    hnames = model.head_param_names(cfg, p)
+    h = jnp.asarray(np.random.default_rng(1)
+                    .normal(size=(cfg.batch, cfg.hidden)).astype(np.float32))
+    got = fn(*[p[k] for k in hnames], h)[0]
+    np.testing.assert_allclose(got, model.head_logits(p, h), rtol=1e-5)
+
+
+# -- tpu variant ---------------------------------------------------------------
+
+def test_tpu_grad_step_runs_and_is_finite():
+    cfg = CFGS["tpu"]
+    p = model.init_params(cfg)
+    names = model.param_order(p)
+    fn, _, _ = model.build_grad_step(cfg, p)
+    nodes, adj, mask = _batch(cfg)
+    stale = jnp.zeros((cfg.batch, 1))
+    eta = jnp.ones((cfg.batch,))
+    invj = jnp.ones((cfg.batch,))
+    pm = np.zeros((cfg.batch, cfg.batch), np.float32)
+    pm[0, 1] = pm[2, 3] = 1.0
+    outs = fn(*[p[k] for k in names], nodes, adj, mask, stale, eta, invj,
+              jnp.asarray(pm))
+    assert np.isfinite(float(outs[0]))
+    assert outs[-1].shape == (cfg.batch, 1)

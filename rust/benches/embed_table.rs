@@ -1,0 +1,41 @@
+//! Historical embedding table 𝒯 micro-bench: put/get throughput at the
+//! shapes the trainer actually uses (the paper's claim that 𝒯 lookups are
+//! negligible next to a forward pass — Table 3 discussion).
+//!
+//!     cargo bench --bench embed_table
+
+#[path = "harness.rs"]
+mod harness;
+
+use gst::table::EmbeddingTable;
+use harness::Bench;
+
+fn main() {
+    // malnet-large-like: 240 graphs x ~24 segments, d=64
+    let counts = vec![24usize; 240];
+    let dim = 64;
+    let h = vec![0.5f32; dim];
+    println!("\nembedding table: {} rows x d={dim}\n", 240 * 24);
+    let mut t = EmbeddingTable::new(&counts, dim);
+    Bench::new("put x 5760 (full refresh sweep)").iters(20).run(|| {
+        for g in 0..240 {
+            for s in 0..24 {
+                t.put(g, s, &h, 1);
+            }
+        }
+    });
+    Bench::new("get x 5760 (epoch of stale reads)").iters(20).run(|| {
+        let mut acc = 0f32;
+        for g in 0..240 {
+            for s in 0..24 {
+                acc += t.get(g, s).unwrap()[0];
+            }
+        }
+        std::hint::black_box(acc);
+    });
+    Bench::new("staleness histogram sweep").iters(20).run(|| {
+        std::hint::black_box(t.mean_staleness(100));
+    });
+    println!("\ntable bytes: {} ({:.2} MiB)", t.bytes(),
+             t.bytes() as f64 / (1 << 20) as f64);
+}

@@ -1,0 +1,89 @@
+//! Minimal bench harness (criterion is unavailable offline — DESIGN.md §3):
+//! warmup, timed iterations, trimmed-mean / p50 / stddev reporting.
+//! Included by each bench target via `#[path = "harness.rs"] mod harness;`.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench { name: name.to_string(), warmup: 2, iters: 10 }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Bench {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Bench {
+        self.iters = n;
+        self
+    }
+
+    /// Run `f` (warmup + timed) and print a stats line. Returns mean ms.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> f64 {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let mean = trimmed_mean(&samples, 0.1);
+        let sd = stddev(&samples);
+        let p50 = percentile(&samples, 50.0);
+        println!(
+            "{:<44} {:>10.3} ms  ±{:>8.3}  p50 {:>10.3}  n={}",
+            self.name, mean, sd, p50, self.iters
+        );
+        mean
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let (lo, hi) = (rank.floor() as usize, rank.ceil() as usize);
+    if lo == hi { v[lo] } else { v[lo] + (rank - lo as f64) * (v[hi] - v[lo]) }
+}
+
+pub fn trimmed_mean(xs: &[f64], frac: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let k = ((v.len() as f64) * frac).floor() as usize;
+    mean(&v[k..v.len() - k.min(v.len() - 1)])
+}
+
+pub fn artifacts(variant: &str) -> Option<String> {
+    let d = format!("{}/artifacts/{variant}", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&d).is_dir().then_some(d)
+}

@@ -1,0 +1,33 @@
+//! Partitioner throughput + quality across all Table 6 algorithms.
+//!
+//!     cargo bench --bench partitioners
+
+#[path = "harness.rs"]
+mod harness;
+
+use gst::datasets::{MalnetDataset, MalnetSplit};
+use gst::partition::Algorithm;
+use gst::util::rng::Pcg64;
+use harness::Bench;
+
+fn main() {
+    let data = MalnetDataset::generate(MalnetSplit::Large, 6, 1);
+    let nodes: usize = data.graphs.iter().map(|g| g.num_nodes()).sum();
+    println!(
+        "\npartitioners: {} graphs, {} total nodes, max_size=128\n",
+        data.graphs.len(),
+        nodes
+    );
+    for alg in Algorithm::all() {
+        let mut cut_total = 0usize;
+        Bench::new(alg.name()).iters(5).run(|| {
+            let mut rng = Pcg64::new(3, 3);
+            cut_total = 0;
+            for g in &data.graphs {
+                let set = alg.partition(g, 128, &mut rng);
+                cut_total += set.cut_cost(g);
+            }
+        });
+        println!("{:<44} cut/replica cost = {cut_total}", "");
+    }
+}

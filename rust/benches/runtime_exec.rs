@@ -1,0 +1,72 @@
+//! PJRT executable latency: the L3-visible cost of each AOT function at
+//! production shapes — the §Perf L3 accounting baseline.
+//!
+//!     cargo bench --bench runtime_exec
+
+#[path = "harness.rs"]
+mod harness;
+
+use gst::runtime::engine::HostTensor;
+use gst::runtime::{Engine, ParamStore};
+use harness::Bench;
+
+fn main() {
+    let Some(dir) = harness::artifacts("malnet_sage_n128") else {
+        println!("runtime_exec: artifacts not built, skipping");
+        return;
+    };
+    let eng = Engine::open(&dir).unwrap();
+    let m = &eng.manifest;
+    let ps = ParamStore::load(&dir, m).unwrap();
+    let (b, n, f, h) = (m.batch, m.max_nodes, m.feat, m.hidden);
+    let np = m.params.len();
+    eng.warmup(&["embed_fwd", "grad_step", "apply_step", "predict"])
+        .unwrap();
+    println!("\nPJRT executable latency ({}):\n", m.variant);
+
+    let params: Vec<HostTensor> =
+        ps.values.iter().map(|v| HostTensor::F32(v.clone())).collect();
+    let nodes = vec![0.1f32; b * n * f];
+    let adj = vec![0.01f32; b * n * n];
+    let mask = vec![1f32; b * n];
+
+    let mut inputs = params.clone();
+    inputs.push(HostTensor::F32(nodes.clone()));
+    inputs.push(HostTensor::F32(adj.clone()));
+    inputs.push(HostTensor::F32(mask.clone()));
+    Bench::new("embed_fwd  (B=8 segments fwd)").iters(30).run(|| {
+        eng.call("embed_fwd", &inputs).unwrap()
+    });
+
+    let mut ginputs = params.clone();
+    ginputs.push(HostTensor::F32(nodes.clone()));
+    ginputs.push(HostTensor::F32(adj.clone()));
+    ginputs.push(HostTensor::F32(mask.clone()));
+    ginputs.push(HostTensor::F32(vec![0f32; b * h]));
+    ginputs.push(HostTensor::F32(vec![1f32; b]));
+    ginputs.push(HostTensor::F32(vec![1f32; b]));
+    ginputs.push(HostTensor::S32(vec![0i32; b]));
+    let out = eng.call("grad_step", &ginputs).unwrap();
+    Bench::new("grad_step  (B=8 fwd+bwd)").iters(30).run(|| {
+        eng.call("grad_step", &ginputs).unwrap()
+    });
+
+    let grads: Vec<HostTensor> = out[1..1 + np].to_vec();
+    let mut ainputs = params.clone();
+    ainputs.extend(ps.m.iter().map(|x| HostTensor::F32(x.clone())));
+    ainputs.extend(ps.v.iter().map(|x| HostTensor::F32(x.clone())));
+    ainputs.extend(grads);
+    ainputs.push(HostTensor::F32(vec![1.0]));
+    ainputs.push(HostTensor::F32(vec![0.001]));
+    Bench::new("apply_step (Adam, all params)").iters(30).run(|| {
+        eng.call("apply_step", &ainputs).unwrap()
+    });
+
+    let head: Vec<usize> = m.head_indices();
+    let mut pinputs: Vec<HostTensor> =
+        head.iter().map(|&i| HostTensor::F32(ps.values[i].clone())).collect();
+    pinputs.push(HostTensor::F32(vec![0.1f32; b * h]));
+    Bench::new("predict    (head only)").iters(30).run(|| {
+        eng.call("predict", &pinputs).unwrap()
+    });
+}

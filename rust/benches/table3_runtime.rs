@@ -1,0 +1,43 @@
+//! Table 3 bench: average training time per iteration on MalNet-Large,
+//! per method. This is the wall-clock claim behind "GST+EFD is 3x faster
+//! than GST": GST re-encodes every stale segment, the table methods don't.
+//!
+//!     cargo bench --bench table3_runtime
+
+#[path = "harness.rs"]
+mod harness;
+
+use gst::datasets::{MalnetDataset, MalnetSplit};
+use gst::runtime::Engine;
+use gst::train::{MalnetTrainer, Method, TrainConfig};
+
+fn main() {
+    let Some(dir) = harness::artifacts("malnet_sage_n128") else {
+        println!("table3_runtime: artifacts not built, skipping");
+        return;
+    };
+    let eng = Engine::open(&dir).unwrap();
+    let data = MalnetDataset::generate(MalnetSplit::Large, 18, 0);
+    println!("\nTable 3 (per-iteration train time, MalNet-Large, SAGE):");
+    for method in
+        [Method::Gst, Method::GstOne, Method::GstE, Method::GstEFD]
+    {
+        let cfg = TrainConfig {
+            method,
+            epochs: 8,
+            finetune_epochs: 0,
+            eval_every: 99,
+            seed: 0,
+            ..TrainConfig::default()
+        };
+        let mut tr = MalnetTrainer::new(&eng, &data, cfg).unwrap();
+        let res = tr.train().unwrap();
+        println!(
+            "{:<44} {:>10.1} ms/step ({} grad_steps, {} embed_fwd)",
+            method.name(),
+            res.step_ms,
+            res.call_counts.get("grad_step").unwrap_or(&0),
+            res.call_counts.get("embed_fwd").unwrap_or(&0),
+        );
+    }
+}

@@ -1,0 +1,115 @@
+//! LDP-style structural node features (Local Degree Profile).
+//!
+//! MalNet ships no node attributes; the standard practice (followed by the
+//! paper's GraphGym setup) is degree-derived features. We use a 16-dim
+//! profile: an 8-bucket log2 degree one-hot plus 8 neighborhood statistics.
+
+use crate::graph::Csr;
+
+pub const LDP_DIM: usize = 16;
+
+/// Compute the 16-dim LDP feature for every node of `g` and return a new
+/// graph with those features installed.
+pub fn with_ldp_features(g: &Csr) -> Csr {
+    let n = g.num_nodes();
+    let mut feats = vec![0f32; n * LDP_DIM];
+    let max_deg = (0..n).map(|v| g.degree(v)).max().unwrap_or(1).max(1) as f32;
+    for v in 0..n {
+        let d = g.degree(v);
+        let row = &mut feats[v * LDP_DIM..(v + 1) * LDP_DIM];
+        // one-hot log2 degree bucket [0..8)
+        let bucket = if d == 0 {
+            0
+        } else {
+            (((d as f32).log2().floor() as usize) + 1).min(7)
+        };
+        row[bucket] = 1.0;
+        // neighbor-degree statistics
+        let nd: Vec<f32> =
+            g.neighbors(v).iter().map(|&w| g.degree(w as usize) as f32).collect();
+        let (mn, mx, mean, std) = if nd.is_empty() {
+            (0.0, 0.0, 0.0, 0.0)
+        } else {
+            let mean = nd.iter().sum::<f32>() / nd.len() as f32;
+            let var = nd.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+                / nd.len() as f32;
+            (
+                nd.iter().cloned().fold(f32::MAX, f32::min),
+                nd.iter().cloned().fold(f32::MIN, f32::max),
+                mean,
+                var.sqrt(),
+            )
+        };
+        row[8] = d as f32 / max_deg; // normalized own degree
+        row[9] = (1.0 + d as f32).ln(); // log degree
+        row[10] = mn / max_deg;
+        row[11] = mx / max_deg;
+        row[12] = mean / max_deg;
+        row[13] = std / max_deg;
+        // local clustering proxy: closed wedges among first ≤8 neighbors
+        row[14] = clustering_proxy(g, v);
+        row[15] = 1.0; // bias
+    }
+    Csr { offsets: g.offsets.clone(), adj: g.adj.clone(), feats, feat_dim: LDP_DIM }
+}
+
+fn clustering_proxy(g: &Csr, v: usize) -> f32 {
+    let nb = g.neighbors(v);
+    let k = nb.len().min(8);
+    if k < 2 {
+        return 0.0;
+    }
+    let mut closed = 0usize;
+    let mut total = 0usize;
+    for i in 0..k {
+        for j in i + 1..k {
+            total += 1;
+            if g.has_edge(nb[i] as usize, nb[j] as usize) {
+                closed += 1;
+            }
+        }
+    }
+    closed as f32 / total as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn ldp_dims_and_onehot() {
+        let mut b = GraphBuilder::new(4, 0);
+        b.add_edge(0, 1);
+        b.add_edge(0, 2);
+        b.add_edge(0, 3);
+        let g = with_ldp_features(&b.build());
+        assert_eq!(g.feat_dim, LDP_DIM);
+        // hub has degree 3 -> bucket floor(log2 3)+1 = 2
+        assert_eq!(g.feat(0)[2], 1.0);
+        // leaves have degree 1 -> bucket 1
+        assert_eq!(g.feat(1)[1], 1.0);
+        // bias always set
+        for v in 0..4 {
+            assert_eq!(g.feat(v)[15], 1.0);
+        }
+    }
+
+    #[test]
+    fn clustering_detects_triangle() {
+        let mut b = GraphBuilder::new(3, 0);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 0);
+        let g = with_ldp_features(&b.build());
+        assert_eq!(g.feat(0)[14], 1.0);
+    }
+
+    #[test]
+    fn isolated_node_is_finite() {
+        let b = GraphBuilder::new(1, 0);
+        let g = with_ldp_features(&b.build());
+        assert!(g.feat(0).iter().all(|x| x.is_finite()));
+        assert_eq!(g.feat(0)[0], 1.0); // degree-0 bucket
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic dataset generators standing in for the paper's corpora
+//! (substitutions documented in DESIGN.md §2):
+//!
+//! * [`malnet`] — 5-class function-call-graph classification, `tiny` and
+//!   `large` splits (MalNet-Tiny / MalNet-Large analogues)
+//! * [`tpugraphs`] — HLO-like layered DAGs with per-node layout configs and
+//!   a synthetic runtime model; ranking target (TpuGraphs analogue)
+//! * [`features`] — LDP-style structural node features shared by both
+
+pub mod features;
+pub mod malnet;
+pub mod tpugraphs;
+
+pub use malnet::{MalnetDataset, MalnetSplit};
+pub use tpugraphs::{TpuDataset, TpuGraph};

@@ -1,0 +1,283 @@
+//! Synthetic TpuGraphs: HLO-like layered DAGs + layout configs + a
+//! synthetic runtime model, evaluated by ranking (OPA).
+//!
+//! The real dataset predicts TPU runtime of an XLA HLO graph under a
+//! tensor-layout configuration; the configuration is featurized into node
+//! features and the model ranks configurations per graph. This generator
+//! preserves exactly that structure:
+//!
+//! * topology: layered op DAG (op kinds: matmul, conv, elementwise, ...)
+//!   with skip connections, sizes drawn heavy-tailed;
+//! * config: one layout code (0..4) per *configurable* node (matmul/conv/
+//!   reshape), one-hot in the last 8 feature dims;
+//! * runtime label: Σ over nodes of `base_cost(kind) · size · layout_factor`
+//!   plus a **producer/consumer layout-mismatch penalty** per edge (the
+//!   physical analogue: a transpose copy gets inserted) plus mild noise.
+//!
+//! The mismatch term makes runtime a function of *interacting* node pairs,
+//! so per-segment sums genuinely approximate, not equal, the true runtime —
+//! which is the interesting regime for GST (cut edges lose exactly the
+//! cross-segment mismatch information).
+
+use crate::graph::{Csr, GraphBuilder};
+use crate::util::rng::Pcg64;
+
+pub const NUM_OP_KINDS: usize = 12;
+pub const STATIC_DIM: usize = 16; // op one-hot (12) + log-size, fan, depth, 1
+pub const CONFIG_DIM: usize = 8; // layout one-hot (5) + 3 spare
+pub const FEAT_DIM: usize = STATIC_DIM + CONFIG_DIM; // 24, matches VariantConfig
+pub const NUM_LAYOUTS: usize = 5;
+
+/// Op kinds roughly mirroring HLO opcode classes.
+const KIND_COST: [f32; NUM_OP_KINDS] = [
+    8.0,  // 0 matmul
+    10.0, // 1 conv
+    1.0,  // 2 elementwise-unary
+    1.5,  // 3 elementwise-binary
+    2.5,  // 4 reduce
+    0.8,  // 5 reshape
+    1.2,  // 6 transpose
+    0.6,  // 7 broadcast
+    1.8,  // 8 concat
+    2.2,  // 9 gather
+    1.4,  // 10 slice
+    0.4,  // 11 constant/param
+];
+
+/// Kinds whose layout is configurable (the paper: layouts of convolutions
+/// and reshapes etc. are what the compiler config controls).
+fn configurable(kind: usize) -> bool {
+    matches!(kind, 0 | 1 | 5 | 6)
+}
+
+/// One HLO-like graph with its per-config layouts and measured runtimes.
+pub struct TpuGraph {
+    /// Static part of the features (STATIC_DIM dims); config dims zeroed.
+    pub csr: Csr,
+    pub kinds: Vec<u8>,
+    pub sizes: Vec<f32>, // per-node tensor size factor
+    /// `configs[c][v]` = layout code of node v under config c (0 if fixed).
+    pub configs: Vec<Vec<u8>>,
+    /// `runtimes[c]` = synthetic measured runtime of config c.
+    pub runtimes: Vec<f32>,
+}
+
+pub struct TpuDataset {
+    pub graphs: Vec<TpuGraph>,
+    pub train: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+impl TpuDataset {
+    /// `count` graphs, each with `configs_per_graph` sampled configurations.
+    pub fn generate(count: usize, configs_per_graph: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 0x79a1);
+        let graphs: Vec<TpuGraph> = (0..count)
+            .map(|_| TpuGraph::generate(configs_per_graph, &mut rng))
+            .collect();
+        let mut idx: Vec<usize> = (0..count).collect();
+        rng.shuffle(&mut idx);
+        let ntr = count * 8 / 10;
+        TpuDataset {
+            graphs,
+            train: idx[..ntr].to_vec(),
+            test: idx[ntr..].to_vec(),
+        }
+    }
+}
+
+impl TpuGraph {
+    pub fn generate(num_configs: usize, rng: &mut Pcg64) -> TpuGraph {
+        // layered DAG: depth 8-40 layers, width 8-160, sizes heavy-tailed
+        let depth = 8 + rng.below(33);
+        let width = 8 + rng.below(153);
+        let mut layer_of = Vec::new();
+        let mut layers: Vec<Vec<usize>> = vec![Vec::new(); depth];
+        for l in 0..depth {
+            let w = 1 + rng.below(width);
+            for _ in 0..w {
+                layers[l].push(layer_of.len());
+                layer_of.push(l);
+            }
+        }
+        let n = layer_of.len();
+        let mut b = GraphBuilder::new(n, FEAT_DIM);
+        let mut kinds = vec![0u8; n];
+        let mut sizes = vec![0f32; n];
+        for v in 0..n {
+            kinds[v] = rng.below(NUM_OP_KINDS) as u8;
+            sizes[v] = rng.power_law(2.0, 1.0, 64.0) as f32;
+        }
+        // edges: each node (layer >= 1) consumes 1-3 producers from the
+        // previous layer plus occasional skip connections
+        for l in 1..depth {
+            for &v in &layers[l] {
+                let fanin = 1 + rng.below(3);
+                for _ in 0..fanin {
+                    let src_layer = if rng.coin(0.15) && l >= 2 {
+                        rng.below(l) // skip connection
+                    } else {
+                        l - 1
+                    };
+                    let cands = &layers[src_layer];
+                    let u = cands[rng.below(cands.len())];
+                    b.add_edge(u, v);
+                }
+            }
+        }
+        // static features
+        let max_fan = 6.0f32;
+        let mut g = b.build();
+        for v in 0..n {
+            let mut f = vec![0f32; FEAT_DIM];
+            f[kinds[v] as usize] = 1.0;
+            f[12] = sizes[v].ln();
+            f[13] = (g.degree(v) as f32 / max_fan).min(1.0);
+            f[14] = layer_of[v] as f32 / depth as f32;
+            f[15] = 1.0;
+            let row = v * FEAT_DIM;
+            g.feats[row..row + FEAT_DIM].copy_from_slice(&f);
+        }
+        // configs + runtimes
+        let mut configs = Vec::with_capacity(num_configs);
+        let mut runtimes = Vec::with_capacity(num_configs);
+        for _ in 0..num_configs {
+            let cfg: Vec<u8> = (0..n)
+                .map(|v| {
+                    if configurable(kinds[v] as usize) {
+                        rng.below(NUM_LAYOUTS) as u8
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let rt = synthetic_runtime(&g, &kinds, &sizes, &cfg, rng);
+            configs.push(cfg);
+            runtimes.push(rt);
+        }
+        TpuGraph { csr: g, kinds, sizes, configs, runtimes }
+    }
+
+    /// Bake config `c`'s layout one-hot into a copy of the static features
+    /// (dims STATIC_DIM..). This is what segment padding feeds the model.
+    pub fn features_for_config(&self, c: usize) -> Vec<f32> {
+        let n = self.csr.num_nodes();
+        let mut feats = self.csr.feats.clone();
+        for v in 0..n {
+            let code = self.configs[c][v] as usize;
+            feats[v * FEAT_DIM + STATIC_DIM + code] = 1.0;
+        }
+        feats
+    }
+}
+
+/// The synthetic cost model (the "hardware" substitute, DESIGN.md §2).
+fn synthetic_runtime(
+    g: &Csr,
+    kinds: &[u8],
+    sizes: &[f32],
+    cfg: &[u8],
+    rng: &mut Pcg64,
+) -> f32 {
+    let mut total = 0f32;
+    for v in 0..g.num_nodes() {
+        let kind = kinds[v] as usize;
+        // layout affects compute cost of configurable ops: layout 0 is
+        // optimal, others add up to 60%
+        let layout_factor = if configurable(kind) {
+            1.0 + 0.15 * cfg[v] as f32
+        } else {
+            1.0
+        };
+        total += KIND_COST[kind] * sizes[v] * layout_factor;
+    }
+    // producer/consumer layout mismatch inserts a transpose copy
+    for (u, v) in g.edges() {
+        let (u, v) = (u as usize, v as usize);
+        if cfg[u] != cfg[v]
+            && (configurable(kinds[u] as usize)
+                || configurable(kinds[v] as usize))
+        {
+            total += 0.8 * (sizes[u].min(sizes[v]));
+        }
+    }
+    // measurement noise ~1%
+    total * (1.0 + 0.01 * rng.normal() as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = TpuDataset::generate(3, 4, 9);
+        let b = TpuDataset::generate(3, 4, 9);
+        for (x, y) in a.graphs.iter().zip(&b.graphs) {
+            assert_eq!(x.csr, y.csr);
+            assert_eq!(x.runtimes, y.runtimes);
+        }
+    }
+
+    #[test]
+    fn shapes_consistent() {
+        let d = TpuDataset::generate(2, 6, 1);
+        for g in &d.graphs {
+            let n = g.csr.num_nodes();
+            assert_eq!(g.kinds.len(), n);
+            assert_eq!(g.configs.len(), 6);
+            assert_eq!(g.runtimes.len(), 6);
+            for c in &g.configs {
+                assert_eq!(c.len(), n);
+            }
+            assert_eq!(g.csr.feat_dim, FEAT_DIM);
+        }
+    }
+
+    #[test]
+    fn config_features_one_hot() {
+        let d = TpuDataset::generate(1, 3, 2);
+        let g = &d.graphs[0];
+        let feats = g.features_for_config(1);
+        for v in 0..g.csr.num_nodes() {
+            let cfg_slice =
+                &feats[v * FEAT_DIM + STATIC_DIM..(v + 1) * FEAT_DIM];
+            let ones = cfg_slice.iter().filter(|&&x| x == 1.0).count();
+            assert_eq!(ones, 1, "node {v}: {cfg_slice:?}");
+            assert_eq!(
+                cfg_slice[g.configs[1][v] as usize], 1.0,
+                "wrong position"
+            );
+        }
+    }
+
+    #[test]
+    fn runtimes_vary_with_config() {
+        let d = TpuDataset::generate(1, 8, 3);
+        let rts = &d.graphs[0].runtimes;
+        let min = rts.iter().cloned().fold(f32::MAX, f32::min);
+        let max = rts.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(max > min * 1.01, "configs indistinguishable: {rts:?}");
+    }
+
+    #[test]
+    fn all_positive_runtimes() {
+        let d = TpuDataset::generate(2, 4, 4);
+        for g in &d.graphs {
+            for &rt in &g.runtimes {
+                assert!(rt > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn split_disjoint() {
+        let d = TpuDataset::generate(10, 2, 5);
+        let mut all: Vec<usize> =
+            d.train.iter().chain(&d.test).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 10);
+        assert_eq!(d.train.len(), 8);
+    }
+}

@@ -1,0 +1,229 @@
+//! Shared experiment plumbing: sizing profiles, engine/dataset caches,
+//! result collection and table printing.
+
+use crate::datasets::{MalnetDataset, MalnetSplit, TpuDataset};
+use crate::runtime::Engine;
+use crate::train::{MalnetTrainer, Method, RunResult, TrainConfig, TpuTrainer};
+use crate::util::json::Json;
+use crate::util::stats;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+
+/// Experiment sizing. `quick` is used by the e2e test and smoke runs;
+/// `full` is what EXPERIMENTS.md records.
+#[derive(Clone, Copy, Debug)]
+pub struct Profile {
+    pub tiny_graphs: usize,
+    pub large_graphs: usize,
+    pub tpu_graphs: usize,
+    pub tpu_configs: usize,
+    pub epochs: usize,
+    pub finetune_epochs: usize,
+    pub tpu_epochs: usize,
+    pub seeds: usize,
+}
+
+impl Profile {
+    pub fn full() -> Profile {
+        Profile {
+            tiny_graphs: 60,
+            large_graphs: 18,
+            tpu_graphs: 10,
+            tpu_configs: 6,
+            epochs: 24,
+            finetune_epochs: 8,
+            tpu_epochs: 6,
+            seeds: 1,
+        }
+    }
+
+    pub fn quick() -> Profile {
+        Profile {
+            tiny_graphs: 40,
+            large_graphs: 12,
+            tpu_graphs: 6,
+            tpu_configs: 4,
+            epochs: 3,
+            finetune_epochs: 1,
+            tpu_epochs: 2,
+            seeds: 1,
+        }
+    }
+}
+
+/// Root paths used by every experiment.
+pub struct Env {
+    pub artifacts: String,
+    pub out_dir: String,
+    pub profile: Profile,
+}
+
+impl Env {
+    pub fn new(artifacts: &str, out_dir: &str, quick: bool) -> Result<Env> {
+        std::fs::create_dir_all(out_dir)
+            .with_context(|| format!("mkdir {out_dir}"))?;
+        Ok(Env {
+            artifacts: artifacts.to_string(),
+            out_dir: out_dir.to_string(),
+            profile: if quick { Profile::quick() } else { Profile::full() },
+        })
+    }
+
+    pub fn engine(&self, variant: &str) -> Result<Engine> {
+        let dir = format!("{}/{variant}", self.artifacts);
+        if !std::path::Path::new(&dir).is_dir() {
+            return Err(anyhow!(
+                "artifact variant `{variant}` not built — run `make artifacts`"
+            ));
+        }
+        Engine::open(&dir)
+    }
+
+    pub fn malnet(&self, split: MalnetSplit, seed: u64) -> MalnetDataset {
+        let count = match split {
+            MalnetSplit::Tiny => self.profile.tiny_graphs,
+            MalnetSplit::Large => self.profile.large_graphs,
+        };
+        MalnetDataset::generate(split, count, 1000 + seed)
+    }
+
+    pub fn tpu(&self, seed: u64) -> TpuDataset {
+        TpuDataset::generate(
+            self.profile.tpu_graphs,
+            self.profile.tpu_configs,
+            2000 + seed,
+        )
+    }
+
+    /// Write an experiment's JSON record under `runs/`.
+    pub fn save(&self, id: &str, payload: Json) -> Result<String> {
+        let path = format!("{}/{id}.json", self.out_dir);
+        std::fs::write(&path, payload.to_string())
+            .with_context(|| format!("write {path}"))?;
+        Ok(path)
+    }
+}
+
+/// Accuracy ± std over seeds for one cell of a results table.
+#[derive(Clone, Debug, Default)]
+pub struct Cell {
+    pub values: Vec<f64>,
+    /// e.g. "OOM" when the run refuses to start
+    pub note: Option<String>,
+}
+
+impl Cell {
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn oom() -> Cell {
+        Cell { values: vec![], note: Some("OOM".into()) }
+    }
+
+    pub fn render(&self, scale: f64) -> String {
+        match (&self.note, self.values.is_empty()) {
+            (Some(n), _) => n.clone(),
+            (None, true) => "-".into(),
+            (None, false) => format!(
+                "{:.2}±{:.2}",
+                scale * stats::mean(&self.values),
+                scale * stats::stddev(&self.values)
+            ),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("values", Json::arr(self.values.iter().map(|&v| Json::num(v)))),
+            (
+                "note",
+                self.note
+                    .as_ref()
+                    .map(|n| Json::str(n))
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// Print an aligned table: rows × columns of rendered cells.
+pub fn print_table(
+    title: &str,
+    col_names: &[String],
+    rows: &[(String, Vec<String>)],
+) {
+    println!("\n=== {title} ===");
+    let w0 = rows
+        .iter()
+        .map(|(n, _)| n.len())
+        .chain([10])
+        .max()
+        .unwrap();
+    let wc = col_names
+        .iter()
+        .map(|c| c.len())
+        .chain(
+            rows.iter().flat_map(|(_, cells)| cells.iter().map(|c| c.len())),
+        )
+        .max()
+        .unwrap()
+        .max(8);
+    print!("{:<w0$}", "");
+    for c in col_names {
+        print!(" {c:>wc$}");
+    }
+    println!();
+    for (name, cells) in rows {
+        print!("{name:<w0$}");
+        for c in cells {
+            print!(" {c:>wc$}");
+        }
+        println!();
+    }
+}
+
+/// One MalNet training run under a method, returning the RunResult
+/// (errors containing "OOM" become Cell::oom upstream).
+pub fn run_malnet(
+    eng: &Engine,
+    data: &MalnetDataset,
+    cfg: TrainConfig,
+) -> Result<RunResult> {
+    let mut tr = MalnetTrainer::new(eng, data, cfg)?;
+    tr.train()
+}
+
+pub fn run_tpu(
+    eng: &Engine,
+    data: &TpuDataset,
+    cfg: TrainConfig,
+) -> Result<RunResult> {
+    let mut tr = TpuTrainer::new(eng, data, cfg)?;
+    tr.train()
+}
+
+/// Method sets used by the paper's tables.
+pub fn table1_methods() -> Vec<Method> {
+    Method::all().to_vec()
+}
+
+pub fn table2_methods() -> Vec<Method> {
+    vec![
+        Method::FullGraph,
+        Method::Gst,
+        Method::GstOne,
+        Method::GstE,
+        Method::GstEFD,
+    ]
+}
+
+/// Collect cells into a json object keyed "row/col".
+pub fn cells_to_json(cells: &BTreeMap<String, Cell>) -> Json {
+    Json::Obj(
+        cells
+            .iter()
+            .map(|(k, c)| (k.clone(), c.to_json()))
+            .collect(),
+    )
+}

@@ -1,0 +1,190 @@
+//! Drivers for the paper's figures (2, 3, 4, 5, 6) — each prints the
+//! series the figure plots and saves them as JSON for re-plotting.
+
+use super::common::*;
+use crate::datasets::malnet::MalnetSplit;
+use crate::metrics::Curve;
+use crate::train::{Method, TrainConfig};
+use crate::util::json::Json;
+use anyhow::Result;
+
+fn curve_cfg(env: &Env, method: Method, seed: u64) -> TrainConfig {
+    TrainConfig {
+        method,
+        epochs: env.profile.epochs,
+        finetune_epochs: env.profile.finetune_epochs,
+        eval_every: 1, // per-epoch resolution for curves
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+fn print_curve(label: &str, c: &Curve) {
+    println!("-- {label}");
+    println!("{:>6} {:>8} {:>8}", "epoch", "train", "test");
+    for i in 0..c.epochs.len() {
+        println!(
+            "{:>6} {:>8.4} {:>8.4}",
+            c.epochs[i], c.train[i], c.test[i]
+        );
+    }
+}
+
+/// Figure 2: GST+EFD accuracy curve on MalNet-Large (SAGE); the finetune
+/// phase starts after `epochs` and should close the train/test gap.
+pub fn fig2(env: &Env) -> Result<()> {
+    let eng = env.engine("malnet_sage_n128")?;
+    let data = env.malnet(MalnetSplit::Large, 0);
+    let cfg = curve_cfg(env, Method::GstEFD, 0);
+    let finetune_at = cfg.epochs;
+    let res = run_malnet(&eng, &data, cfg)?;
+    println!("\n=== Figure 2: GST+EFD curve, finetune starts at epoch {finetune_at} ===");
+    print_curve("GST+EFD (SAGE, malnet-large)", &res.curve);
+    let path = env.save(
+        "fig2",
+        Json::obj(vec![
+            ("finetune_at", Json::num(finetune_at as f64)),
+            ("curve", res.curve.to_json()),
+        ]),
+    )?;
+    println!("saved {path}");
+    Ok(())
+}
+
+/// Figure 3: SED keep-ratio sweep p ∈ {0, 0.25, 0.5, 0.75, 1.0}.
+pub fn fig3(env: &Env) -> Result<()> {
+    let eng = env.engine("malnet_sage_n128")?;
+    let ps = [0.0f32, 0.25, 0.5, 0.75, 1.0];
+    let mut series = Vec::new();
+    for &p in &ps {
+        let mut vals = Vec::new();
+        for seed in 0..env.profile.seeds as u64 {
+            let data = env.malnet(MalnetSplit::Large, seed);
+            let mut cfg = curve_cfg(env, Method::GstEFD, seed);
+            cfg.keep_p = p;
+            cfg.eval_every = cfg.epochs;
+            let res = run_malnet(&eng, &data, cfg)?;
+            vals.push(res.test_metric);
+        }
+        series.push((p, vals));
+    }
+    println!("\n=== Figure 3: SED keep ratio p (GST+EFD, SAGE, malnet-large) ===");
+    println!("{:>6} {:>10} {:>8}", "p", "test acc", "std");
+    for (p, vals) in &series {
+        println!(
+            "{:>6.2} {:>10.4} {:>8.4}",
+            p,
+            crate::util::stats::mean(vals),
+            crate::util::stats::stddev(vals)
+        );
+    }
+    let path = env.save(
+        "fig3",
+        Json::arr(series.iter().map(|(p, vals)| {
+            Json::obj(vec![
+                ("p", Json::num(*p as f64)),
+                ("acc", Json::arr(vals.iter().map(|&v| Json::num(v)))),
+            ])
+        })),
+    )?;
+    println!("saved {path}");
+    Ok(())
+}
+
+/// Figure 4: max-segment-size sweep (separate AOT variants per size).
+pub fn fig4(env: &Env) -> Result<()> {
+    let sizes = [32usize, 64, 128, 256];
+    let mut series = Vec::new();
+    for &n in &sizes {
+        let eng = env.engine(&format!("malnet_sage_n{n}"))?;
+        let mut vals = Vec::new();
+        for seed in 0..env.profile.seeds as u64 {
+            let data = env.malnet(MalnetSplit::Large, seed);
+            let mut cfg = curve_cfg(env, Method::GstEFD, seed);
+            cfg.eval_every = cfg.epochs;
+            let res = run_malnet(&eng, &data, cfg)?;
+            vals.push(res.test_metric);
+        }
+        series.push((n, vals));
+    }
+    println!("\n=== Figure 4: max segment size (GST+EFD, SAGE, malnet-large) ===");
+    println!("{:>8} {:>10} {:>8}", "maxseg", "test acc", "std");
+    for (n, vals) in &series {
+        println!(
+            "{:>8} {:>10.4} {:>8.4}",
+            n,
+            crate::util::stats::mean(vals),
+            crate::util::stats::stddev(vals)
+        );
+    }
+    let path = env.save(
+        "fig4",
+        Json::arr(series.iter().map(|(n, vals)| {
+            Json::obj(vec![
+                ("max_nodes", Json::num(*n as f64)),
+                ("acc", Json::arr(vals.iter().map(|&v| Json::num(v)))),
+            ])
+        })),
+    )?;
+    println!("saved {path}");
+    Ok(())
+}
+
+/// Figure 5: OPA convergence curves on TpuGraphs.
+pub fn fig5(env: &Env) -> Result<()> {
+    let eng = env.engine("tpu_sage_n128")?;
+    let data = env.tpu(0);
+    let methods =
+        [Method::Gst, Method::GstOne, Method::GstE, Method::GstEFD];
+    let mut out = Vec::new();
+    println!("\n=== Figure 5: OPA curves on TpuGraphs ===");
+    for method in methods {
+        let mut cfg = curve_cfg(env, method, 0);
+        cfg.epochs = env.profile.tpu_epochs;
+        let res = run_tpu(&eng, &data, cfg)?;
+        print_curve(method.name(), &res.curve);
+        out.push((method.name().to_string(), res.curve));
+    }
+    let path = env.save(
+        "fig5",
+        Json::Obj(
+            out.into_iter().map(|(k, c)| (k, c.to_json())).collect(),
+        ),
+    )?;
+    println!("saved {path}");
+    Ok(())
+}
+
+/// Figure 6: accuracy convergence curves on MalNet-Tiny.
+pub fn fig6(env: &Env) -> Result<()> {
+    let eng = env.engine("malnet_sage_n128")?;
+    let data = env.malnet(MalnetSplit::Tiny, 0);
+    let methods = [
+        Method::FullGraph,
+        Method::Gst,
+        Method::GstE,
+        Method::GstEFD,
+    ];
+    let mut out = Vec::new();
+    println!("\n=== Figure 6: accuracy curves on MalNet-Tiny (SAGE) ===");
+    for method in methods {
+        match run_malnet(&eng, &data, curve_cfg(env, method, 0)) {
+            Ok(res) => {
+                print_curve(method.name(), &res.curve);
+                out.push((method.name().to_string(), res.curve));
+            }
+            Err(e) if e.to_string().contains("OOM") => {
+                println!("-- {} : OOM", method.name());
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let path = env.save(
+        "fig6",
+        Json::Obj(
+            out.into_iter().map(|(k, c)| (k, c.to_json())).collect(),
+        ),
+    )?;
+    println!("saved {path}");
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! Experiment drivers — one per table/figure in the paper's evaluation
+//! (the DESIGN.md §5 index). Invoked via `gst experiment --id <name>`.
+
+pub mod common;
+pub mod figs;
+pub mod tables;
+
+use anyhow::{bail, Result};
+use common::Env;
+
+pub const ALL_IDS: [&str; 10] = [
+    "table1", "table2", "table3", "table4", "table6", "fig2", "fig3",
+    "fig4", "fig5", "fig6",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, env: &Env) -> Result<()> {
+    match id {
+        "table1" => tables::table1(env),
+        "table2" => tables::table2(env),
+        "table3" => tables::table3(env),
+        "table4" => tables::table4(env),
+        "table6" => tables::table6(env),
+        "fig2" => figs::fig2(env),
+        "fig3" => figs::fig3(env),
+        "fig4" => figs::fig4(env),
+        "fig5" => figs::fig5(env),
+        "fig6" => figs::fig6(env),
+        other => bail!("unknown experiment `{other}`; known: {ALL_IDS:?}"),
+    }
+}

@@ -1,0 +1,274 @@
+//! Drivers for the paper's tables (1, 2, 3, 4, 6).
+
+use super::common::*;
+use crate::datasets::malnet::MalnetSplit;
+use crate::graph::GraphStats;
+use crate::partition::Algorithm;
+use crate::train::{Method, TrainConfig};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+fn base_cfg(env: &Env, method: Method, seed: u64) -> TrainConfig {
+    TrainConfig {
+        method,
+        epochs: env.profile.epochs,
+        finetune_epochs: env.profile.finetune_epochs,
+        eval_every: env.profile.epochs.max(1),
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+/// Table 1: test accuracy, MalNet-{Tiny,Large} × {GCN,SAGE,GPS} × methods.
+pub fn table1(env: &Env) -> Result<()> {
+    let mut cells: BTreeMap<String, Cell> = BTreeMap::new();
+    let splits = [MalnetSplit::Tiny, MalnetSplit::Large];
+    let backbones = ["gcn", "sage", "gps"];
+    for &split in &splits {
+        for backbone in backbones {
+            let variant = format!("malnet_{backbone}_n128");
+            let eng = env.engine(&variant)?;
+            for seed in 0..env.profile.seeds as u64 {
+                let data = env.malnet(split, seed);
+                for method in table1_methods() {
+                    let key =
+                        format!("{}/{backbone}/{}", split.name(), method.name());
+                    let cell = cells.entry(key).or_default();
+                    if cell.note.is_some() {
+                        continue;
+                    }
+                    match run_malnet(&eng, &data, base_cfg(env, method, seed))
+                    {
+                        Ok(res) => cell.push(res.test_metric),
+                        Err(e) if e.to_string().contains("OOM") => {
+                            *cell = Cell::oom();
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+            }
+        }
+    }
+    // render in the paper's layout: rows = methods, cols = split×backbone
+    let mut cols = Vec::new();
+    for &split in &splits {
+        for backbone in backbones {
+            cols.push(format!("{}/{backbone}", split.name()));
+        }
+    }
+    let rows: Vec<(String, Vec<String>)> = table1_methods()
+        .iter()
+        .map(|m| {
+            let cells_row: Vec<String> = cols
+                .iter()
+                .map(|c| {
+                    cells
+                        .get(&format!("{c}/{}", m.name()))
+                        .map(|cell| cell.render(100.0))
+                        .unwrap_or_else(|| "-".into())
+                })
+                .collect();
+            (m.name().to_string(), cells_row)
+        })
+        .collect();
+    print_table("Table 1: test accuracy (%) on MalNet", &cols, &rows);
+    let path = env.save("table1", cells_to_json(&cells))?;
+    println!("saved {path}");
+    Ok(())
+}
+
+/// Table 2: train/test OPA on TpuGraphs.
+pub fn table2(env: &Env) -> Result<()> {
+    let eng = env.engine("tpu_sage_n128")?;
+    let mut cells: BTreeMap<String, Cell> = BTreeMap::new();
+    for seed in 0..env.profile.seeds as u64 {
+        let data = env.tpu(seed);
+        for method in table2_methods() {
+            let mut cfg = base_cfg(env, method, seed);
+            cfg.epochs = env.profile.tpu_epochs;
+            let (tr_key, te_key) = (
+                format!("{}/train", method.name()),
+                format!("{}/test", method.name()),
+            );
+            if cells.get(&tr_key).map(|c| c.note.is_some()).unwrap_or(false) {
+                continue;
+            }
+            match run_tpu(&eng, &data, cfg) {
+                Ok(res) => {
+                    cells.entry(tr_key).or_default().push(res.train_metric);
+                    cells.entry(te_key).or_default().push(res.test_metric);
+                }
+                Err(e) if e.to_string().contains("OOM") => {
+                    cells.insert(tr_key, Cell::oom());
+                    cells.insert(te_key, Cell::oom());
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    let cols = vec!["Train OPA".to_string(), "Test OPA".to_string()];
+    let rows: Vec<(String, Vec<String>)> = table2_methods()
+        .iter()
+        .map(|m| {
+            (
+                m.name().to_string(),
+                vec![
+                    cells
+                        .get(&format!("{}/train", m.name()))
+                        .map(|c| c.render(100.0))
+                        .unwrap_or("-".into()),
+                    cells
+                        .get(&format!("{}/test", m.name()))
+                        .map(|c| c.render(100.0))
+                        .unwrap_or("-".into()),
+                ],
+            )
+        })
+        .collect();
+    print_table("Table 2: OPA (%) on TpuGraphs", &cols, &rows);
+    let path = env.save("table2", cells_to_json(&cells))?;
+    println!("saved {path}");
+    Ok(())
+}
+
+/// Table 3: average training time per iteration (ms) on MalNet-Large.
+pub fn table3(env: &Env) -> Result<()> {
+    let backbones = ["gcn", "sage", "gps"];
+    let methods = table2_methods(); // Full(OOM), GST, GST-One, +E, +EFD
+    let mut cells: BTreeMap<String, Cell> = BTreeMap::new();
+    let data = env.malnet(MalnetSplit::Large, 0);
+    for backbone in backbones {
+        let eng = env.engine(&format!("malnet_{backbone}_n128"))?;
+        for &method in &methods {
+            let mut cfg = base_cfg(env, method, 0);
+            cfg.epochs = 8.min(env.profile.epochs.max(2));
+            cfg.finetune_epochs = 0;
+            cfg.eval_every = 99;
+            let key = format!("{backbone}/{}", method.name());
+            match run_malnet(&eng, &data, cfg) {
+                Ok(res) => cells.entry(key).or_default().push(res.step_ms),
+                Err(e) if e.to_string().contains("OOM") => {
+                    cells.insert(key, Cell::oom());
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    let cols: Vec<String> = backbones.iter().map(|s| s.to_string()).collect();
+    let rows: Vec<(String, Vec<String>)> = methods
+        .iter()
+        .map(|m| {
+            (
+                m.name().to_string(),
+                cols.iter()
+                    .map(|b| {
+                        cells
+                            .get(&format!("{b}/{}", m.name()))
+                            .map(|c| c.render(1.0))
+                            .unwrap_or("-".into())
+                    })
+                    .collect(),
+            )
+        })
+        .collect();
+    print_table(
+        "Table 3: train time per iteration (ms), MalNet-Large",
+        &cols,
+        &rows,
+    );
+    let path = env.save("table3", cells_to_json(&cells))?;
+    println!("saved {path}");
+    Ok(())
+}
+
+/// Table 4: dataset statistics.
+pub fn table4(env: &Env) -> Result<()> {
+    println!("\n=== Table 4: dataset statistics ===");
+    println!("{}", GraphStats::header());
+    let tiny = env.malnet(MalnetSplit::Tiny, 0);
+    println!("{}", GraphStats::over(&tiny.graphs).row("malnet-tiny"));
+    let large = env.malnet(MalnetSplit::Large, 0);
+    println!("{}", GraphStats::over(&large.graphs).row("malnet-large"));
+    let tpu = env.tpu(0);
+    let tpu_graphs: Vec<_> =
+        tpu.graphs.iter().map(|g| g.csr.clone()).collect();
+    println!("{}", GraphStats::over(&tpu_graphs).row("tpugraphs"));
+    let total_pairs: usize =
+        tpu.graphs.iter().map(|g| g.configs.len()).sum();
+    println!("tpugraphs: {} graphs x configs = {total_pairs} samples",
+             tpu.graphs.len());
+    let stats = |gs: &[crate::graph::Csr]| {
+        let s = GraphStats::over(gs);
+        Json::obj(vec![
+            ("avg_nodes", Json::num(s.avg_nodes)),
+            ("max_nodes", Json::num(s.max_nodes as f64)),
+            ("avg_edges", Json::num(s.avg_edges)),
+            ("max_edges", Json::num(s.max_edges as f64)),
+        ])
+    };
+    let payload = Json::obj(vec![
+        ("malnet_tiny", stats(&tiny.graphs)),
+        ("malnet_large", stats(&large.graphs)),
+        ("tpugraphs", stats(&tpu_graphs)),
+    ]);
+    let path = env.save("table4", payload)?;
+    println!("saved {path}");
+    Ok(())
+}
+
+/// Table 6: partition-algorithm ablation (GST+EFD, SAGE).
+pub fn table6(env: &Env) -> Result<()> {
+    let eng = env.engine("malnet_sage_n128")?;
+    let algs = [
+        ("Edge-Cut Random", Algorithm::EdgeCutRandom),
+        ("Edge-Cut Louvain", Algorithm::Louvain),
+        ("Edge-Cut METIS-like", Algorithm::MetisLike),
+        ("Edge-Cut BFS", Algorithm::EdgeCutBfs),
+        ("Vertex-Cut Random", Algorithm::VertexCutRandom),
+        ("Vertex-Cut DBH", Algorithm::VertexCutDbh),
+        ("Vertex-Cut NE", Algorithm::VertexCutNe),
+    ];
+    let splits = [MalnetSplit::Tiny, MalnetSplit::Large];
+    let mut cells: BTreeMap<String, Cell> = BTreeMap::new();
+    for &split in &splits {
+        for seed in 0..env.profile.seeds as u64 {
+            let data = env.malnet(split, seed);
+            for (name, alg) in algs {
+                let mut cfg = base_cfg(env, Method::GstEFD, seed);
+                cfg.partition = alg;
+                let res = run_malnet(&eng, &data, cfg)?;
+                cells
+                    .entry(format!("{name}/{}", split.name()))
+                    .or_default()
+                    .push(res.test_metric);
+            }
+        }
+    }
+    let cols: Vec<String> =
+        splits.iter().map(|s| s.name().to_string()).collect();
+    let rows: Vec<(String, Vec<String>)> = algs
+        .iter()
+        .map(|(name, _)| {
+            (
+                name.to_string(),
+                cols.iter()
+                    .map(|c| {
+                        cells
+                            .get(&format!("{name}/{c}"))
+                            .map(|cell| cell.render(100.0))
+                            .unwrap_or("-".into())
+                    })
+                    .collect(),
+            )
+        })
+        .collect();
+    print_table(
+        "Table 6: partition algorithms, GST+EFD + SAGE, test accuracy (%)",
+        &cols,
+        &rows,
+    );
+    let path = env.save("table6", cells_to_json(&cells))?;
+    println!("saved {path}");
+    Ok(())
+}

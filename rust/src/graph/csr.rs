@@ -1,0 +1,237 @@
+//! Compressed-sparse-row graph with node features.
+
+/// Undirected graph in CSR form. Each undirected edge {u, v} is stored
+/// twice (u→v and v→u); `num_edges` counts undirected edges once.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    /// Offsets into `adj`; length `n + 1`.
+    pub offsets: Vec<u32>,
+    /// Concatenated neighbor lists (sorted within each node).
+    pub adj: Vec<u32>,
+    /// Row-major `n × feat_dim` node features.
+    pub feats: Vec<f32>,
+    pub feat_dim: usize,
+}
+
+impl Csr {
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Undirected edge count.
+    pub fn num_edges(&self) -> usize {
+        self.adj.len() / 2
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        (self.offsets[v + 1] - self.offsets[v]) as usize
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.adj[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    pub fn feat(&self, v: usize) -> &[f32] {
+        &self.feats[v * self.feat_dim..(v + 1) * self.feat_dim]
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.neighbors(u).binary_search(&(v as u32)).is_ok()
+    }
+
+    /// All undirected edges (u < v).
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.num_edges());
+        for u in 0..self.num_nodes() {
+            for &v in self.neighbors(u) {
+                if (u as u32) < v {
+                    out.push((u as u32, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Induced subgraph over `nodes` (order preserved). Returns the graph
+    /// plus the mapping from new index -> original index.
+    pub fn induced(&self, nodes: &[u32]) -> (Csr, Vec<u32>) {
+        let mut rank = vec![u32::MAX; self.num_nodes()];
+        for (new, &old) in nodes.iter().enumerate() {
+            rank[old as usize] = new as u32;
+        }
+        let mut b = GraphBuilder::new(nodes.len(), self.feat_dim);
+        for (new, &old) in nodes.iter().enumerate() {
+            b.set_feat(new, self.feat(old as usize));
+            for &w in self.neighbors(old as usize) {
+                let rw = rank[w as usize];
+                if rw != u32::MAX && (new as u32) < rw {
+                    b.add_edge(new, rw as usize);
+                }
+            }
+        }
+        (b.build(), nodes.to_vec())
+    }
+
+    /// Connected components (BFS), as a component id per node.
+    pub fn components(&self) -> Vec<u32> {
+        let n = self.num_nodes();
+        let mut comp = vec![u32::MAX; n];
+        let mut next = 0u32;
+        let mut queue = std::collections::VecDeque::new();
+        for start in 0..n {
+            if comp[start] != u32::MAX {
+                continue;
+            }
+            comp[start] = next;
+            queue.push_back(start as u32);
+            while let Some(u) = queue.pop_front() {
+                for &v in self.neighbors(u as usize) {
+                    if comp[v as usize] == u32::MAX {
+                        comp[v as usize] = next;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            next += 1;
+        }
+        comp
+    }
+}
+
+/// Incremental builder: collect undirected edges, then `build()` the CSR.
+#[derive(Clone, Debug)]
+pub struct GraphBuilder {
+    n: usize,
+    feat_dim: usize,
+    edges: Vec<(u32, u32)>,
+    feats: Vec<f32>,
+}
+
+impl GraphBuilder {
+    pub fn new(n: usize, feat_dim: usize) -> Self {
+        GraphBuilder {
+            n,
+            feat_dim,
+            edges: Vec::new(),
+            feats: vec![0.0; n * feat_dim],
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Add an undirected edge; self-loops and duplicates are dropped at
+    /// build time.
+    pub fn add_edge(&mut self, u: usize, v: usize) {
+        debug_assert!(u < self.n && v < self.n, "edge ({u},{v}) out of range");
+        if u != v {
+            self.edges.push((u.min(v) as u32, u.max(v) as u32));
+        }
+    }
+
+    pub fn set_feat(&mut self, v: usize, feat: &[f32]) {
+        assert_eq!(feat.len(), self.feat_dim);
+        self.feats[v * self.feat_dim..(v + 1) * self.feat_dim]
+            .copy_from_slice(feat);
+    }
+
+    pub fn build(mut self) -> Csr {
+        self.edges.sort_unstable();
+        self.edges.dedup();
+        let mut deg = vec![0u32; self.n];
+        for &(u, v) in &self.edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = Vec::with_capacity(self.n + 1);
+        offsets.push(0u32);
+        for d in &deg {
+            offsets.push(offsets.last().unwrap() + d);
+        }
+        let mut cursor: Vec<u32> = offsets[..self.n].to_vec();
+        let mut adj = vec![0u32; self.edges.len() * 2];
+        for &(u, v) in &self.edges {
+            adj[cursor[u as usize] as usize] = v;
+            cursor[u as usize] += 1;
+            adj[cursor[v as usize] as usize] = u;
+            cursor[v as usize] += 1;
+        }
+        // sort each neighbor list for binary-search lookups
+        for v in 0..self.n {
+            adj[offsets[v] as usize..offsets[v + 1] as usize].sort_unstable();
+        }
+        Csr { offsets, adj, feats: self.feats, feat_dim: self.feat_dim }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle_plus_isolate() -> Csr {
+        // 0-1-2 triangle, 3 isolated
+        let mut b = GraphBuilder::new(4, 2);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 0);
+        b.set_feat(3, &[1.0, 2.0]);
+        b.build()
+    }
+
+    #[test]
+    fn basic_topology() {
+        let g = triangle_plus_isolate();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(3), 0);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert!(g.has_edge(0, 2));
+        assert!(!g.has_edge(0, 3));
+    }
+
+    #[test]
+    fn duplicates_and_self_loops_dropped() {
+        let mut b = GraphBuilder::new(3, 0);
+        b.add_edge(0, 1);
+        b.add_edge(1, 0);
+        b.add_edge(0, 0);
+        let g = b.build();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.degree(0), 1);
+    }
+
+    #[test]
+    fn features_stored() {
+        let g = triangle_plus_isolate();
+        assert_eq!(g.feat(3), &[1.0, 2.0]);
+        assert_eq!(g.feat(0), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn edges_listing() {
+        let g = triangle_plus_isolate();
+        assert_eq!(g.edges(), vec![(0, 1), (0, 2), (1, 2)]);
+    }
+
+    #[test]
+    fn induced_subgraph() {
+        let g = triangle_plus_isolate();
+        let (sub, map) = g.induced(&[1, 2, 3]);
+        assert_eq!(sub.num_nodes(), 3);
+        assert_eq!(sub.num_edges(), 1); // only 1-2 survives
+        assert!(sub.has_edge(0, 1));
+        assert_eq!(map, vec![1, 2, 3]);
+        assert_eq!(sub.feat(2), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn components_split() {
+        let g = triangle_plus_isolate();
+        let comp = g.components();
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[1], comp[2]);
+        assert_ne!(comp[0], comp[3]);
+    }
+}

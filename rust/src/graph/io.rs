@@ -1,0 +1,157 @@
+//! Binary serialization for graph datasets.
+//!
+//! Format (little-endian):
+//! `magic "GSTG" | u32 version | u32 feat_dim | u32 n | u32 m2 |
+//!  offsets (n+1)*u32 | adj m2*u32 | feats n*feat_dim*f32`
+//!
+//! Dataset files concatenate a `u32 count`, then `count` records of
+//! `u32 label_bits(f32 label) | graph`.
+
+use super::Csr;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 4] = b"GSTG";
+const VERSION: u32 = 1;
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn get_u32(inp: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    inp.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn encode_graph(g: &Csr, out: &mut Vec<u8>) {
+    out.extend_from_slice(MAGIC);
+    put_u32(out, VERSION);
+    put_u32(out, g.feat_dim as u32);
+    put_u32(out, g.num_nodes() as u32);
+    put_u32(out, g.adj.len() as u32);
+    for &o in &g.offsets {
+        put_u32(out, o);
+    }
+    for &a in &g.adj {
+        put_u32(out, a);
+    }
+    for &f in &g.feats {
+        out.extend_from_slice(&f.to_le_bytes());
+    }
+}
+
+pub fn decode_graph(inp: &mut impl Read) -> Result<Csr> {
+    let mut magic = [0u8; 4];
+    inp.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic {magic:?}");
+    }
+    let version = get_u32(inp)?;
+    if version != VERSION {
+        bail!("unsupported version {version}");
+    }
+    let feat_dim = get_u32(inp)? as usize;
+    let n = get_u32(inp)? as usize;
+    let m2 = get_u32(inp)? as usize;
+    let mut offsets = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        offsets.push(get_u32(inp)?);
+    }
+    let mut adj = Vec::with_capacity(m2);
+    for _ in 0..m2 {
+        adj.push(get_u32(inp)?);
+    }
+    let mut feats = vec![0f32; n * feat_dim];
+    let mut buf = vec![0u8; n * feat_dim * 4];
+    inp.read_exact(&mut buf)?;
+    for (i, c) in buf.chunks_exact(4).enumerate() {
+        feats[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    if *offsets.last().unwrap() as usize != adj.len() {
+        bail!("corrupt offsets");
+    }
+    Ok(Csr { offsets, adj, feats, feat_dim })
+}
+
+/// Write a labelled dataset to a file.
+pub fn save_dataset(path: &str, graphs: &[(Csr, f32)]) -> Result<()> {
+    let mut out = Vec::new();
+    put_u32(&mut out, graphs.len() as u32);
+    for (g, label) in graphs {
+        put_u32(&mut out, label.to_bits());
+        encode_graph(g, &mut out);
+    }
+    std::fs::File::create(path)
+        .with_context(|| format!("create {path}"))?
+        .write_all(&out)?;
+    Ok(())
+}
+
+/// Read a labelled dataset from a file.
+pub fn load_dataset(path: &str) -> Result<Vec<(Csr, f32)>> {
+    let mut f =
+        std::fs::File::open(path).with_context(|| format!("open {path}"))?;
+    let count = get_u32(&mut f)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let label = f32::from_bits(get_u32(&mut f)?);
+        out.push((decode_graph(&mut f)?, label));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn sample() -> Csr {
+        let mut b = GraphBuilder::new(5, 3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(3, 4);
+        b.set_feat(2, &[1.0, -2.0, 0.5]);
+        b.build()
+    }
+
+    #[test]
+    fn graph_roundtrip() {
+        let g = sample();
+        let mut buf = Vec::new();
+        encode_graph(&g, &mut buf);
+        let g2 = decode_graph(&mut buf.as_slice()).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn dataset_roundtrip() {
+        let dir = std::env::temp_dir().join("gst_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ds.bin");
+        let ds = vec![(sample(), 1.0f32), (sample(), -3.5f32)];
+        save_dataset(path.to_str().unwrap(), &ds).unwrap();
+        let ds2 = load_dataset(path.to_str().unwrap()).unwrap();
+        assert_eq!(ds.len(), ds2.len());
+        for ((g, l), (g2, l2)) in ds.iter().zip(&ds2) {
+            assert_eq!(g, g2);
+            assert_eq!(l, l2);
+        }
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let mut buf = Vec::new();
+        encode_graph(&sample(), &mut buf);
+        buf[0] = b'X';
+        assert!(decode_graph(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let mut buf = Vec::new();
+        encode_graph(&sample(), &mut buf);
+        buf.truncate(buf.len() - 3);
+        assert!(decode_graph(&mut buf.as_slice()).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Graph substrate: CSR storage, builders, statistics and binary I/O.
+//!
+//! Everything downstream (partitioners, segment extraction, generators)
+//! works on [`Csr`] — an undirected graph in compressed-sparse-row form
+//! with per-node f32 feature vectors.
+
+pub mod csr;
+pub mod io;
+pub mod stats;
+
+pub use csr::{Csr, GraphBuilder};
+pub use stats::GraphStats;

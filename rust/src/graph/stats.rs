@@ -1,0 +1,111 @@
+//! Graph/dataset statistics — regenerates the paper's Table 4.
+
+use super::Csr;
+
+/// Summary statistics for a collection of graphs.
+#[derive(Clone, Debug, Default)]
+pub struct GraphStats {
+    pub count: usize,
+    pub avg_nodes: f64,
+    pub min_nodes: usize,
+    pub max_nodes: usize,
+    pub avg_edges: f64,
+    pub min_edges: usize,
+    pub max_edges: usize,
+}
+
+impl GraphStats {
+    pub fn over(graphs: &[Csr]) -> GraphStats {
+        if graphs.is_empty() {
+            return GraphStats::default();
+        }
+        let nodes: Vec<usize> = graphs.iter().map(|g| g.num_nodes()).collect();
+        let edges: Vec<usize> = graphs.iter().map(|g| g.num_edges()).collect();
+        GraphStats {
+            count: graphs.len(),
+            avg_nodes: nodes.iter().sum::<usize>() as f64 / graphs.len() as f64,
+            min_nodes: *nodes.iter().min().unwrap(),
+            max_nodes: *nodes.iter().max().unwrap(),
+            avg_edges: edges.iter().sum::<usize>() as f64 / graphs.len() as f64,
+            min_edges: *edges.iter().min().unwrap(),
+            max_edges: *edges.iter().max().unwrap(),
+        }
+    }
+
+    /// One row in the Table 4 layout.
+    pub fn row(&self, name: &str) -> String {
+        format!(
+            "{name:<14} {:>10.0} {:>10} {:>10} {:>10.0} {:>10} {:>10}",
+            self.avg_nodes,
+            self.min_nodes,
+            self.max_nodes,
+            self.avg_edges,
+            self.min_edges,
+            self.max_edges
+        )
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<14} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+            "", "avg#nodes", "min#nodes", "max#nodes", "avg#edges",
+            "min#edges", "max#edges"
+        )
+    }
+}
+
+/// Degree histogram over one graph (log2 buckets) — input to the LDP-style
+/// node features and handy for generator sanity checks.
+pub fn degree_log2_histogram(g: &Csr, buckets: usize) -> Vec<usize> {
+    let mut hist = vec![0usize; buckets];
+    for v in 0..g.num_nodes() {
+        let d = g.degree(v);
+        let b = if d == 0 {
+            0
+        } else {
+            ((d as f64).log2().floor() as usize + 1).min(buckets - 1)
+        };
+        hist[b] += 1;
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn path(n: usize) -> Csr {
+        let mut b = GraphBuilder::new(n, 0);
+        for i in 0..n - 1 {
+            b.add_edge(i, i + 1);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn stats_over_collection() {
+        let gs = vec![path(3), path(5), path(10)];
+        let s = GraphStats::over(&gs);
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min_nodes, 3);
+        assert_eq!(s.max_nodes, 10);
+        assert!((s.avg_nodes - 6.0).abs() < 1e-9);
+        assert_eq!(s.min_edges, 2);
+        assert_eq!(s.max_edges, 9);
+    }
+
+    #[test]
+    fn stats_empty() {
+        assert_eq!(GraphStats::over(&[]).count, 0);
+    }
+
+    #[test]
+    fn degree_histogram() {
+        let g = path(5); // degrees 1,2,2,2,1
+        let h = degree_log2_histogram(&g, 4);
+        assert_eq!(h[1], 2); // degree 1 -> bucket 1
+        assert_eq!(h[2], 3); // degree 2 -> bucket 2
+        assert_eq!(h[0], 0);
+    }
+}

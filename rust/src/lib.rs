@@ -1,0 +1,39 @@
+//! # gst — Graph Segment Training
+//!
+//! A three-layer reproduction of *"Learning Large Graph Property Prediction
+//! via Graph Segment Training"* (Cao et al., NeurIPS 2023): this crate is
+//! the **Layer-3 coordinator** — partitioning, segment sampling, the
+//! historical embedding table, Stale Embedding Dropout, prediction-head
+//! finetuning and the training loop — driving AOT-compiled JAX/Pallas
+//! compute (Layers 2/1) through the PJRT C API via the [`xla`] crate.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — in-repo substrates: PCG64 RNG, JSON, CLI, thread pool
+//! * [`graph`] — CSR graphs, stats, binary serialization
+//! * [`datasets`] — synthetic MalNet / TpuGraphs generators
+//! * [`partition`] — METIS-like, Louvain, BFS, random edge-cut; vertex-cut
+//!   Random / DBH / NE (the Table 6 ablation)
+//! * [`segment`] — segment extraction + padding to the AOT fixed shapes
+//! * [`table`] — the historical embedding table 𝒯
+//! * [`sed`] — Stale Embedding Dropout (Eq. 1)
+//! * [`runtime`] — PJRT executable cache + manifest-driven marshalling
+//! * [`train`] — the GST trainer: Full/GST/GST-One/+E/+EF/+ED/+EFD
+//! * [`memory`] — analytic V100-16GB activation-memory model (OOM rows)
+//! * [`metrics`] — accuracy, OPA, loss curves, timers
+//! * [`exp`] — one driver per paper table/figure
+//! * [`testing`] — property-testing framework used by the test suite
+
+pub mod datasets;
+pub mod exp;
+pub mod graph;
+pub mod memory;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod sed;
+pub mod segment;
+pub mod table;
+pub mod testing;
+pub mod train;
+pub mod util;

@@ -1,0 +1,250 @@
+//! `gst` — command-line launcher for the Graph Segment Training framework.
+//!
+//! Subcommands:
+//!   experiment   regenerate a paper table/figure (see DESIGN.md §5)
+//!   train        one training run with explicit flags
+//!   data-stats   print synthetic dataset statistics (Table 4 shape)
+//!   partition    partition quality report across algorithms
+//!   memory       paper-scale memory model report (the OOM boundary)
+
+use anyhow::{anyhow, bail, Result};
+use gst::datasets::{MalnetDataset, MalnetSplit, TpuDataset};
+use gst::exp::{self, common::Env};
+use gst::graph::GraphStats;
+use gst::memory::MemoryModel;
+use gst::partition::Algorithm;
+use gst::train::{MalnetTrainer, Method, TpuTrainer, TrainConfig};
+use gst::util::cli::Cli;
+use gst::util::rng::Pcg64;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("{e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        bail!(usage());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "experiment" => cmd_experiment(rest),
+        "train" => cmd_train(rest),
+        "data-stats" => cmd_data_stats(rest),
+        "partition" => cmd_partition(rest),
+        "memory" => cmd_memory(),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n{}", usage()),
+    }
+}
+
+fn usage() -> String {
+    format!(
+        "gst — Graph Segment Training (NeurIPS 2023 reproduction)\n\n\
+         USAGE: gst <command> [flags]\n\n\
+         COMMANDS:\n\
+         \x20 experiment --id <{}|all> [--quick] [--artifacts DIR] [--out DIR]\n\
+         \x20 train --dataset <malnet-tiny|malnet-large|tpu> --method <full|gst|gst-one|gst+e|gst+ef|gst+ed|gst+efd>\n\
+         \x20       [--backbone gcn|sage|gps] [--epochs N] [--keep-p P] [--partition ALG] [--seed S] [--workers W]\n\
+         \x20 data-stats [--graphs N]\n\
+         \x20 partition [--alg ALG] [--max-size N]\n\
+         \x20 memory",
+        exp::ALL_IDS.join("|")
+    )
+}
+
+fn cmd_experiment(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("gst experiment", "regenerate a paper table/figure")
+        .opt("id", None, "experiment id or `all`")
+        .opt("artifacts", Some("artifacts"), "AOT artifact root")
+        .opt("out", Some("runs"), "output directory for JSON records")
+        .switch("quick", "small sizing for smoke runs");
+    let args = cli.parse(argv).map_err(|e| anyhow!(e))?;
+    let id = args.get("id").ok_or_else(|| anyhow!("--id required"))?;
+    let env = Env::new(
+        args.get("artifacts").unwrap(),
+        args.get("out").unwrap(),
+        args.get_bool("quick"),
+    )?;
+    if id == "all" {
+        for id in exp::ALL_IDS {
+            exp::run(id, &env)?;
+        }
+        Ok(())
+    } else {
+        exp::run(id, &env)
+    }
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("gst train", "one training run")
+        .opt("dataset", Some("malnet-tiny"), "malnet-tiny|malnet-large|tpu")
+        .opt("method", Some("gst+efd"), "training method")
+        .opt("backbone", Some("sage"), "gcn|sage|gps (malnet only)")
+        .opt("epochs", Some("10"), "training epochs")
+        .opt("finetune-epochs", Some("4"), "+F epochs")
+        .opt("keep-p", Some("0.5"), "SED keep probability")
+        .opt("partition", Some("metis"), "partition algorithm")
+        .opt("seed", Some("0"), "RNG seed")
+        .opt("workers", Some("1"), "simulated data-parallel workers")
+        .opt("graphs", Some("60"), "synthetic dataset size")
+        .opt("artifacts", Some("artifacts"), "AOT artifact root")
+        .opt("max-nodes", Some("128"), "segment size variant (32|64|128|256)")
+        .opt("lr", None, "override learning rate")
+        .switch("curve", "print the per-epoch accuracy curve");
+    let args = cli.parse(argv).map_err(|e| anyhow!(e))?;
+    let method = Method::parse(args.get("method").unwrap())
+        .ok_or_else(|| anyhow!("bad --method"))?;
+    let cfg = TrainConfig {
+        method,
+        epochs: args.get_usize("epochs").map_err(|e| anyhow!(e))?,
+        finetune_epochs: args
+            .get_usize("finetune-epochs")
+            .map_err(|e| anyhow!(e))?,
+        keep_p: args.get_f64("keep-p").map_err(|e| anyhow!(e))? as f32,
+        s_per_graph: 1,
+        workers: args.get_usize("workers").map_err(|e| anyhow!(e))?,
+        seed: args.get_usize("seed").map_err(|e| anyhow!(e))? as u64,
+        partition: Algorithm::parse(args.get("partition").unwrap())
+            .ok_or_else(|| anyhow!("bad --partition"))?,
+        eval_every: 1,
+        lr: args.get("lr").and_then(|s| s.parse::<f32>().ok()),
+    };
+    let count = args.get_usize("graphs").map_err(|e| anyhow!(e))?;
+    let root = args.get("artifacts").unwrap();
+    let nmax = args.get_usize("max-nodes").map_err(|e| anyhow!(e))?;
+    let dataset = args.get("dataset").unwrap();
+    match dataset {
+        "tpu" => {
+            let eng = gst::runtime::Engine::open(&format!(
+                "{root}/tpu_sage_n{nmax}"
+            ))?;
+            let data = TpuDataset::generate(count, 8, cfg.seed + 2000);
+            let mut tr = TpuTrainer::new(&eng, &data, cfg)?;
+            let res = tr.train()?;
+            println!(
+                "method={} train_opa={:.4} test_opa={:.4} step_ms={:.1}",
+                method.name(), res.train_metric, res.test_metric, res.step_ms
+            );
+        }
+        split @ ("malnet-tiny" | "malnet-large") => {
+            let backbone = args.get("backbone").unwrap();
+            let eng = gst::runtime::Engine::open(&format!(
+                "{root}/malnet_{backbone}_n{nmax}"
+            ))?;
+            let split = if split == "malnet-tiny" {
+                MalnetSplit::Tiny
+            } else {
+                MalnetSplit::Large
+            };
+            let data = MalnetDataset::generate(split, count, cfg.seed + 1000);
+            let mut tr = MalnetTrainer::new(&eng, &data, cfg)?;
+            let res = tr.train()?;
+            if args.get_bool("curve") {
+                for i in 0..res.curve.epochs.len() {
+                    println!("epoch {:>4}  train {:.4}  test {:.4}",
+                             res.curve.epochs[i], res.curve.train[i],
+                             res.curve.test[i]);
+                }
+            }
+            println!(
+                "method={} train_acc={:.4} test_acc={:.4} step_ms={:.1}",
+                method.name(), res.train_metric, res.test_metric, res.step_ms
+            );
+            let mut counts: Vec<_> = res.call_counts.iter().collect();
+            counts.sort();
+            for (k, v) in counts {
+                println!("  calls {k}: {v}");
+            }
+        }
+        other => bail!("unknown dataset `{other}`"),
+    }
+    Ok(())
+}
+
+fn cmd_data_stats(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("gst data-stats", "synthetic dataset statistics")
+        .opt("graphs", Some("60"), "graphs per dataset");
+    let args = cli.parse(argv).map_err(|e| anyhow!(e))?;
+    let n = args.get_usize("graphs").map_err(|e| anyhow!(e))?;
+    println!("{}", GraphStats::header());
+    let tiny = MalnetDataset::generate(MalnetSplit::Tiny, n, 1000);
+    println!("{}", GraphStats::over(&tiny.graphs).row("malnet-tiny"));
+    let large = MalnetDataset::generate(MalnetSplit::Large, n.min(48), 1000);
+    println!("{}", GraphStats::over(&large.graphs).row("malnet-large"));
+    let tpu = TpuDataset::generate(n.min(24), 8, 2000);
+    let gs: Vec<_> = tpu.graphs.iter().map(|g| g.csr.clone()).collect();
+    println!("{}", GraphStats::over(&gs).row("tpugraphs"));
+    Ok(())
+}
+
+fn cmd_partition(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("gst partition", "partition quality report")
+        .opt("alg", Some("all"), "algorithm or `all`")
+        .opt("max-size", Some("128"), "max segment size")
+        .opt("graphs", Some("10"), "sample graphs");
+    let args = cli.parse(argv).map_err(|e| anyhow!(e))?;
+    let max = args.get_usize("max-size").map_err(|e| anyhow!(e))?;
+    let n = args.get_usize("graphs").map_err(|e| anyhow!(e))?;
+    let data = MalnetDataset::generate(MalnetSplit::Tiny, n, 1000);
+    let algs: Vec<Algorithm> = match args.get("alg").unwrap() {
+        "all" => Algorithm::all().to_vec(),
+        a => vec![Algorithm::parse(a).ok_or_else(|| anyhow!("bad --alg"))?],
+    };
+    println!(
+        "{:<22} {:>10} {:>10} {:>12} {:>10}",
+        "algorithm", "segments", "cut-cost", "largest-seg", "ms"
+    );
+    for alg in algs {
+        let mut rng = Pcg64::new(7, 7);
+        let t0 = std::time::Instant::now();
+        let (mut segs, mut cut, mut largest) = (0usize, 0usize, 0usize);
+        for g in &data.graphs {
+            let set = alg.partition(g, max, &mut rng);
+            segs += set.segments.len();
+            cut += set.cut_cost(g);
+            largest = largest
+                .max(set.segments.iter().map(|s| s.len()).max().unwrap_or(0));
+        }
+        println!(
+            "{:<22} {:>10} {:>10} {:>12} {:>10.1}",
+            alg.name(),
+            segs,
+            cut,
+            largest,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_memory() -> Result<()> {
+    println!("paper-scale activation-memory model (V100 16 GB, hidden 300):");
+    let m = MemoryModel::malnet_paper("sage");
+    let rows: [(&str, Vec<(usize, usize)>); 3] = [
+        ("malnet-tiny  batch=16", vec![(1_410, 2_860); 16]),
+        ("malnet-large batch=16", vec![(47_838, 225_474); 16]),
+        ("malnet-large worst graph", vec![(541_571, 3_278_318)]),
+    ];
+    for (name, batch) in rows {
+        let peak = m.full_graph_peak(&batch);
+        println!(
+            "  full-graph {name:<28} {:>8.2} GiB  {}",
+            peak as f64 / (1u64 << 30) as f64,
+            if m.full_graph_ooms(&batch) { "OOM" } else { "fits" }
+        );
+    }
+    let gst = m.gst_peak_bytes(16, 1, 5_000, 20_000);
+    println!(
+        "  GST (any split, max-seg 5k)          {:>8.2} GiB  fits — \
+         constant in graph size",
+        gst as f64 / (1u64 << 30) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,218 @@
+//! Evaluation metrics and curve tracking: top-1 accuracy (MalNet), ordered
+//! pair accuracy (TpuGraphs, paper §5.3), loss curves and wall-clock
+//! timers for the Table 3 runtime analysis.
+
+use std::time::Instant;
+
+/// Top-1 accuracy from logits.
+pub fn accuracy(logits: &[Vec<f32>], labels: &[u8]) -> f64 {
+    assert_eq!(logits.len(), labels.len());
+    if logits.is_empty() {
+        return 0.0;
+    }
+    let correct = logits
+        .iter()
+        .zip(labels)
+        .filter(|(lg, &y)| argmax(lg) == y as usize)
+        .count();
+    correct as f64 / logits.len() as f64
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Softmax cross-entropy (for loss curves; mirrors the L2 definition).
+pub fn cross_entropy(logits: &[Vec<f32>], labels: &[u8]) -> f64 {
+    assert_eq!(logits.len(), labels.len());
+    if logits.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0f64;
+    for (lg, &y) in logits.iter().zip(labels) {
+        let mx = lg.iter().cloned().fold(f32::MIN, f32::max) as f64;
+        let logz = mx
+            + lg.iter()
+                .map(|&x| ((x as f64) - mx).exp())
+                .sum::<f64>()
+                .ln();
+        total += logz - lg[y as usize] as f64;
+    }
+    total / logits.len() as f64
+}
+
+/// Ordered Pair Accuracy over one graph's configs (paper §5.3):
+/// `OPA = Σ_ij 1[ŷ_i > ŷ_j]·1[y_i > y_j] / Σ_ij 1[y_i > y_j]`.
+pub fn opa(yhat: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(yhat.len(), y.len());
+    let mut num = 0usize;
+    let mut den = 0usize;
+    for i in 0..y.len() {
+        for j in 0..y.len() {
+            if y[i] > y[j] {
+                den += 1;
+                if yhat[i] > yhat[j] {
+                    num += 1;
+                }
+            }
+        }
+    }
+    if den == 0 {
+        1.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+/// Mean OPA over graphs (each graph contributes equally, as in the paper).
+pub fn mean_opa(per_graph: &[(Vec<f32>, Vec<f32>)]) -> f64 {
+    if per_graph.is_empty() {
+        return 0.0;
+    }
+    per_graph
+        .iter()
+        .map(|(yh, y)| opa(yh, y))
+        .sum::<f64>()
+        / per_graph.len() as f64
+}
+
+/// Accumulates per-epoch points for the Figure 2/5/6 curves.
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub epochs: Vec<usize>,
+    pub train: Vec<f64>,
+    pub test: Vec<f64>,
+}
+
+impl Curve {
+    pub fn push(&mut self, epoch: usize, train: f64, test: f64) {
+        self.epochs.push(epoch);
+        self.train.push(train);
+        self.test.push(test);
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("epochs", Json::arr(self.epochs.iter().map(|&e| Json::num(e as f64)))),
+            ("train", Json::arr(self.train.iter().map(|&x| Json::num(x)))),
+            ("test", Json::arr(self.test.iter().map(|&x| Json::num(x)))),
+        ])
+    }
+}
+
+/// Wall-clock timer bucket: per-phase cumulative times + per-iteration
+/// samples (Table 3 reports mean ms/iteration).
+#[derive(Clone, Debug, Default)]
+pub struct StepTimer {
+    samples_ms: Vec<f64>,
+    started: Option<Instant>,
+}
+
+impl StepTimer {
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.samples_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        crate::util::stats::mean(&self.samples_ms)
+    }
+
+    /// Mean excluding the first `skip` samples — the steady-state number
+    /// Table 3 reports (the first epoch pays one-off cold-table costs).
+    pub fn mean_ms_from(&self, skip: usize) -> f64 {
+        if self.samples_ms.len() > skip {
+            crate::util::stats::mean(&self.samples_ms[skip..])
+        } else {
+            self.mean_ms()
+        }
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        crate::util::stats::percentile(&self.samples_ms, 50.0)
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let logits = vec![
+            vec![0.1, 0.9, 0.0],
+            vec![0.8, 0.1, 0.1],
+            vec![0.2, 0.3, 0.5],
+        ];
+        let labels = vec![1u8, 0, 0];
+        assert!((accuracy(&logits, &labels) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ce_matches_manual() {
+        let logits = vec![vec![2.0, 0.0]];
+        let want = (1f64 + (-2f64).exp()).ln();
+        assert!((cross_entropy(&logits, &[0]) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn opa_perfect_and_inverted() {
+        let y = vec![1.0, 2.0, 3.0];
+        assert_eq!(opa(&[1.0, 2.0, 3.0], &y), 1.0);
+        assert_eq!(opa(&[3.0, 2.0, 1.0], &y), 0.0);
+    }
+
+    #[test]
+    fn opa_ties_in_predictions_score_zero() {
+        let y = vec![1.0, 2.0];
+        assert_eq!(opa(&[5.0, 5.0], &y), 0.0);
+    }
+
+    #[test]
+    fn opa_no_ordered_pairs() {
+        assert_eq!(opa(&[1.0, 2.0], &[3.0, 3.0]), 1.0);
+    }
+
+    #[test]
+    fn mean_opa_averages_per_graph() {
+        let g1 = (vec![1.0, 2.0], vec![1.0, 2.0]); // 1.0
+        let g2 = (vec![2.0, 1.0], vec![1.0, 2.0]); // 0.0
+        assert!((mean_opa(&[g1, g2]) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timer_collects_samples() {
+        let mut t = StepTimer::default();
+        for _ in 0..3 {
+            t.start();
+            std::hint::black_box((0..10_000).sum::<u64>());
+            t.stop();
+        }
+        assert_eq!(t.count(), 3);
+        assert!(t.mean_ms() >= 0.0);
+    }
+
+    #[test]
+    fn curve_json_shape() {
+        let mut c = Curve::default();
+        c.push(1, 0.5, 0.4);
+        let j = c.to_json();
+        assert_eq!(j.at("epochs").as_arr().unwrap().len(), 1);
+    }
+}

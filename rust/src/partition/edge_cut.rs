@@ -1,0 +1,154 @@
+//! Simple edge-cut partitioners: Random (the paper's weak baseline — it
+//! destroys subgraph structure, Table 6) and BFS (locality-preserving
+//! greedy growth; also the fallback splitter for oversize segments).
+
+use super::SegmentSet;
+use crate::graph::Csr;
+use crate::util::rng::Pcg64;
+use std::collections::VecDeque;
+
+/// Random node assignment into ⌈n / max_size⌉ balanced parts.
+pub fn random(g: &Csr, max_size: usize, rng: &mut Pcg64) -> SegmentSet {
+    let n = g.num_nodes();
+    let k = n.div_ceil(max_size);
+    let mut nodes: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut nodes);
+    let segments = nodes
+        .chunks(max_size.min(n).max(1))
+        .map(|c| {
+            let mut s = c.to_vec();
+            s.sort_unstable();
+            s
+        })
+        .collect::<Vec<_>>();
+    debug_assert!(segments.len() >= k.min(1));
+    SegmentSet { segments, edges: None }
+}
+
+/// BFS growth: repeatedly grow a segment from an unvisited seed until it
+/// reaches `max_size` nodes, then start a new one. Preserves locality and
+/// always terminates with every node in exactly one segment.
+pub fn bfs(g: &Csr, max_size: usize) -> SegmentSet {
+    let n = g.num_nodes();
+    let mut assigned = vec![false; n];
+    let mut segments = Vec::new();
+    let mut queue = VecDeque::new();
+    let mut seg: Vec<u32> = Vec::with_capacity(max_size);
+    let mut next_seed = 0usize;
+    loop {
+        // refill from the next unassigned seed; crucially this continues
+        // growing the *current* segment, so hub-heavy graphs (where a BFS
+        // frontier dies against already-assigned hubs) cannot fragment
+        // into sliver segments — bfs always yields ceil(n / max_size)
+        // segments, which is what makes it the memory-packing fallback.
+        if queue.is_empty() {
+            while next_seed < n && assigned[next_seed] {
+                next_seed += 1;
+            }
+            if next_seed == n {
+                break;
+            }
+            assigned[next_seed] = true;
+            queue.push_back(next_seed as u32);
+        }
+        while let Some(u) = queue.pop_front() {
+            seg.push(u);
+            if seg.len() == max_size {
+                break;
+            }
+            for &v in g.neighbors(u as usize) {
+                if !assigned[v as usize] {
+                    assigned[v as usize] = true;
+                    queue.push_back(v);
+                }
+            }
+        }
+        if seg.len() == max_size {
+            // nodes still queued belong to a later segment — unmark them
+            for v in queue.drain(..) {
+                assigned[v as usize] = false;
+            }
+            seg.sort_unstable();
+            segments.push(std::mem::take(&mut seg));
+            seg.reserve(max_size);
+        }
+        // otherwise the queue drained naturally: keep filling this segment
+        // from the next seed on the following iteration
+    }
+    if !seg.is_empty() {
+        seg.sort_unstable();
+        segments.push(seg);
+    }
+    SegmentSet { segments, edges: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::testing::prop::{forall, Gen};
+
+    fn grid(w: usize, h: usize) -> Csr {
+        let mut b = GraphBuilder::new(w * h, 0);
+        for y in 0..h {
+            for x in 0..w {
+                let v = y * w + x;
+                if x + 1 < w {
+                    b.add_edge(v, v + 1);
+                }
+                if y + 1 < h {
+                    b.add_edge(v, v + w);
+                }
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn bfs_covers_exactly_once() {
+        let g = grid(10, 10);
+        let set = bfs(&g, 23);
+        set.validate(&g, 23).unwrap();
+    }
+
+    #[test]
+    fn bfs_segments_full_except_last_per_component() {
+        let g = grid(8, 8); // connected, 64 nodes
+        let set = bfs(&g, 30);
+        assert_eq!(set.segments.len(), 3); // 30 + 30 + 4
+        let mut sizes: Vec<usize> =
+            set.segments.iter().map(|s| s.len()).collect();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![4, 30, 30]);
+    }
+
+    #[test]
+    fn random_is_balanced() {
+        let g = grid(10, 10);
+        let mut rng = Pcg64::new(0, 0);
+        let set = random(&g, 32, &mut rng);
+        set.validate(&g, 32).unwrap();
+        assert_eq!(set.segments.len(), 4);
+    }
+
+    #[test]
+    fn prop_bfs_locality_beats_random() {
+        forall("bfs cut <= random cut", 8, Gen::usize(10..30), |&side| {
+            let g = grid(side, side);
+            let mut rng = Pcg64::new(side as u64, 0);
+            let b = bfs(&g, 50).cut_cost(&g);
+            let r = random(&g, 50, &mut rng).cut_cost(&g);
+            b <= r
+        });
+    }
+
+    #[test]
+    fn handles_single_node() {
+        let g = GraphBuilder::new(1, 0).build();
+        let set = bfs(&g, 10);
+        assert_eq!(set.segments, vec![vec![0]]);
+        let mut rng = Pcg64::new(1, 1);
+        let set = random(&g, 10, &mut rng);
+        assert_eq!(set.segments, vec![vec![0]]);
+    }
+}

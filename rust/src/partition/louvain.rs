@@ -1,0 +1,288 @@
+//! Louvain community detection used as an edge-cut partitioner (Table 6).
+//!
+//! Standard two-phase Louvain: (1) greedy modularity-gain node moves until
+//! convergence, (2) aggregate communities into super-nodes; repeat. The
+//! final communities become segments; communities larger than `max_size`
+//! are split by the caller's BFS fallback, and tiny communities are merged
+//! greedily with their most-connected neighbor community to avoid sliver
+//! segments.
+
+use super::SegmentSet;
+use crate::graph::Csr;
+use crate::util::rng::Pcg64;
+
+pub fn partition(g: &Csr, max_size: usize, rng: &mut Pcg64) -> SegmentSet {
+    let n = g.num_nodes();
+    if n == 0 {
+        return SegmentSet { segments: vec![], edges: None };
+    }
+    // current community of each original node
+    let mut node_comm: Vec<u32> = (0..n as u32).collect();
+    // working graph (aggregated); parallel arrays of weighted adjacency
+    let mut adj: Vec<Vec<(u32, f64)>> = (0..n)
+        .map(|v| g.neighbors(v).iter().map(|&w| (w, 1.0)).collect())
+        .collect();
+    // self-loop weight of each super-node = edge weight internal to the
+    // community it represents (required for correct modularity at level > 0)
+    let mut self_w: Vec<f64> = vec![0.0; n];
+    let mut members: Vec<Vec<u32>> = (0..n as u32).map(|v| vec![v]).collect();
+
+    for _level in 0..10 {
+        let (comm, improved) = one_level(&adj, &self_w, rng);
+        if !improved {
+            break;
+        }
+        // relabel communities densely
+        let mut dense = vec![u32::MAX; comm.len()];
+        let mut next = 0u32;
+        for &c in &comm {
+            if dense[c as usize] == u32::MAX {
+                dense[c as usize] = next;
+                next += 1;
+            }
+        }
+        let k = next as usize;
+        // update original-node community labels + aggregate members
+        let mut new_members: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for (v, &c) in comm.iter().enumerate() {
+            let d = dense[c as usize];
+            new_members[d as usize].append(&mut members[v]);
+        }
+        for (ci, ms) in new_members.iter().enumerate() {
+            for &orig in ms {
+                node_comm[orig as usize] = ci as u32;
+            }
+        }
+        members = new_members;
+        // aggregate the working graph (intra-community weight becomes the
+        // super-node's self loop; each undirected intra edge appears twice
+        // in the directed scan, hence the w/2)
+        let mut agg: Vec<std::collections::HashMap<u32, f64>> =
+            vec![std::collections::HashMap::new(); k];
+        let mut new_self = vec![0f64; k];
+        for (u, nbrs) in adj.iter().enumerate() {
+            let cu = dense[comm[u] as usize];
+            new_self[cu as usize] += self_w[u];
+            for &(v, w) in nbrs {
+                let cv = dense[comm[v as usize] as usize];
+                if cu != cv {
+                    *agg[cu as usize].entry(cv).or_insert(0.0) += w;
+                } else {
+                    new_self[cu as usize] += w / 2.0;
+                }
+            }
+        }
+        self_w = new_self;
+        adj = agg
+            .into_iter()
+            .map(|m| {
+                let mut v: Vec<(u32, f64)> = m.into_iter().collect();
+                v.sort_by_key(|&(n, _)| n);
+                v
+            })
+            .collect();
+        if adj.len() <= 1 {
+            break;
+        }
+    }
+
+    // communities -> segments; merge slivers (< max_size/8) into their
+    // most-connected sibling when the union still fits
+    let k = members.len();
+    let mut segments: Vec<Vec<u32>> =
+        members.into_iter().filter(|m| !m.is_empty()).collect();
+    merge_slivers(g, &mut segments, max_size, k);
+    for s in &mut segments {
+        s.sort_unstable();
+    }
+    let _ = node_comm;
+    let mut set = SegmentSet { segments, edges: None };
+    // communities can exceed max_size on graphs with one dominant cluster;
+    // split them here so direct callers get the contract too
+    super::enforce_max_size(g, &mut set, max_size);
+    set
+}
+
+/// One Louvain level: greedy modularity moves. Returns (community of each
+/// node, whether anything moved).
+fn one_level(
+    adj: &[Vec<(u32, f64)>],
+    self_w: &[f64],
+    rng: &mut Pcg64,
+) -> (Vec<u32>, bool) {
+    let n = adj.len();
+    // k_v includes self loops twice (modularity convention); m2 = Σ k_v
+    let deg: Vec<f64> = adj
+        .iter()
+        .zip(self_w)
+        .map(|(nb, &sw)| {
+            nb.iter().map(|&(_, w)| w).sum::<f64>() + 2.0 * sw
+        })
+        .collect();
+    let m2: f64 = deg.iter().sum::<f64>().max(1.0);
+    let mut comm: Vec<u32> = (0..n as u32).collect();
+    let mut comm_deg = deg.clone(); // total degree per community
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut improved = false;
+    for _pass in 0..8 {
+        let mut moves = 0usize;
+        for &v in &order {
+            let v = v as usize;
+            let cv = comm[v];
+            // weights to neighboring communities
+            let mut conn: Vec<(u32, f64)> = Vec::new();
+            for &(u, w) in &adj[v] {
+                let cu = comm[u as usize];
+                match conn.iter_mut().find(|(c, _)| *c == cu) {
+                    Some((_, cw)) => *cw += w,
+                    None => conn.push((cu, w)),
+                }
+            }
+            // remove v from its community, then compare the standard
+            // modularity score  w(v,c) - deg(v)·Σtot(c) / 2m  across all
+            // candidate communities (including staying put)
+            comm_deg[cv as usize] -= deg[v];
+            let score = |c: u32, w: f64| -> f64 {
+                w - deg[v] * comm_deg[c as usize] / m2
+            };
+            let own = conn
+                .iter()
+                .find(|(c, _)| *c == cv)
+                .map(|&(_, w)| w)
+                .unwrap_or(0.0);
+            let mut best = (cv, score(cv, own));
+            for &(c, w) in &conn {
+                if c != cv && score(c, w) > best.1 + 1e-12 {
+                    best = (c, score(c, w));
+                }
+            }
+            comm_deg[best.0 as usize] += deg[v];
+            if best.0 != cv {
+                comm[v] = best.0;
+                moves += 1;
+                improved = true;
+            }
+        }
+        if moves == 0 {
+            break;
+        }
+    }
+    (comm, improved)
+}
+
+fn merge_slivers(
+    g: &Csr,
+    segments: &mut Vec<Vec<u32>>,
+    max_size: usize,
+    _k: usize,
+) {
+    let sliver = (max_size / 8).max(2);
+    loop {
+        // locate the smallest sliver
+        let Some(si) = segments
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.len() < sliver)
+            .min_by_key(|(_, s)| s.len())
+            .map(|(i, _)| i)
+        else {
+            break;
+        };
+        if segments.len() <= 1 {
+            break;
+        }
+        // most-connected other segment that still fits
+        let mut part = vec![u32::MAX; g.num_nodes()];
+        for (i, s) in segments.iter().enumerate() {
+            for &v in s {
+                part[v as usize] = i as u32;
+            }
+        }
+        let mut conn = vec![0usize; segments.len()];
+        for &v in &segments[si] {
+            for &u in g.neighbors(v as usize) {
+                let p = part[u as usize] as usize;
+                if p != si {
+                    conn[p] += 1;
+                }
+            }
+        }
+        let target = (0..segments.len())
+            .filter(|&j| {
+                j != si
+                    && segments[j].len() + segments[si].len() <= max_size
+            })
+            .max_by_key(|&j| (conn[j], std::cmp::Reverse(segments[j].len())));
+        match target {
+            Some(j) if conn[j] > 0 || segments[si].len() < sliver => {
+                let mut moved = std::mem::take(&mut segments[si]);
+                segments[j].append(&mut moved);
+                segments.remove(si);
+            }
+            _ => break,
+        }
+    }
+    segments.retain(|s| !s.is_empty());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    /// Four 25-node cliques in a ring (classic community structure).
+    fn clique_ring() -> Csr {
+        let mut b = GraphBuilder::new(100, 0);
+        for c in 0..4 {
+            let off = c * 25;
+            for i in 0..25 {
+                for j in i + 1..25 {
+                    b.add_edge(off + i, off + j);
+                }
+            }
+        }
+        for c in 0..4 {
+            b.add_edge(c * 25, ((c + 1) % 4) * 25);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn finds_the_cliques() {
+        let g = clique_ring();
+        let mut rng = Pcg64::new(0, 0);
+        let set = partition(&g, 30, &mut rng);
+        set.validate(&g, 30).unwrap();
+        assert_eq!(set.segments.len(), 4, "{:?}",
+                   set.segments.iter().map(|s| s.len()).collect::<Vec<_>>());
+        // cut must be exactly the 4 ring edges
+        assert_eq!(set.cut_cost(&g), 4);
+    }
+
+    #[test]
+    fn merges_slivers() {
+        // a path graph fragments into many tiny communities; after merging
+        // no segment should be tiny unless the graph itself is
+        let mut b = GraphBuilder::new(64, 0);
+        for i in 0..63 {
+            b.add_edge(i, i + 1);
+        }
+        let g = b.build();
+        let mut rng = Pcg64::new(1, 1);
+        let set = partition(&g, 32, &mut rng);
+        set.validate(&g, 32).unwrap();
+        assert!(
+            set.segments.iter().all(|s| s.len() >= 4),
+            "sliver survived: {:?}",
+            set.segments.iter().map(|s| s.len()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(0, 0).build();
+        let mut rng = Pcg64::new(0, 0);
+        assert!(partition(&g, 8, &mut rng).segments.is_empty());
+    }
+}

@@ -1,0 +1,309 @@
+//! Graph partitioners: turn one large graph into bounded-size segments.
+//!
+//! The paper's Table 6 ablates six algorithms; all are implemented here
+//! from scratch (METIS itself is not redistributable in this environment —
+//! DESIGN.md §2):
+//!
+//! | family     | algorithm            | module         |
+//! |------------|----------------------|----------------|
+//! | Edge-Cut   | Random               | [`edge_cut`]   |
+//! | Edge-Cut   | Louvain              | [`louvain`]    |
+//! | Edge-Cut   | METIS-like multilevel| [`metis_like`] |
+//! | Edge-Cut   | BFS (extra baseline) | [`edge_cut`]   |
+//! | Vertex-Cut | Random               | [`vertex_cut`] |
+//! | Vertex-Cut | DBH                  | [`vertex_cut`] |
+//! | Vertex-Cut | NE                   | [`vertex_cut`] |
+//!
+//! Contract (enforced by [`SegmentSet::validate`] and the property tests):
+//! every node appears in ≥ 1 segment (exactly 1 for edge-cut), and every
+//! segment has ≤ `max_size` nodes — the paper's m_GST bound that gives GST
+//! its constant memory footprint.
+
+pub mod edge_cut;
+pub mod louvain;
+pub mod metis_like;
+pub mod vertex_cut;
+
+use crate::graph::Csr;
+use crate::util::rng::Pcg64;
+
+/// The output of any partitioner.
+#[derive(Clone, Debug)]
+pub struct SegmentSet {
+    /// Node ids (into the parent graph) per segment, each sorted.
+    pub segments: Vec<Vec<u32>>,
+    /// For vertex-cut partitioners: the explicit edge set per segment
+    /// (edge-cut segments use the induced subgraph instead).
+    pub edges: Option<Vec<Vec<(u32, u32)>>>,
+}
+
+/// Which algorithm to run — string form used by CLI/configs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    EdgeCutRandom,
+    EdgeCutBfs,
+    Louvain,
+    MetisLike,
+    VertexCutRandom,
+    VertexCutDbh,
+    VertexCutNe,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        Some(match s {
+            "random" | "edge-random" => Algorithm::EdgeCutRandom,
+            "bfs" => Algorithm::EdgeCutBfs,
+            "louvain" => Algorithm::Louvain,
+            "metis" | "metis-like" => Algorithm::MetisLike,
+            "vc-random" => Algorithm::VertexCutRandom,
+            "dbh" => Algorithm::VertexCutDbh,
+            "ne" => Algorithm::VertexCutNe,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::EdgeCutRandom => "edge-cut/random",
+            Algorithm::EdgeCutBfs => "edge-cut/bfs",
+            Algorithm::Louvain => "edge-cut/louvain",
+            Algorithm::MetisLike => "edge-cut/metis-like",
+            Algorithm::VertexCutRandom => "vertex-cut/random",
+            Algorithm::VertexCutDbh => "vertex-cut/dbh",
+            Algorithm::VertexCutNe => "vertex-cut/ne",
+        }
+    }
+
+    pub fn all() -> [Algorithm; 7] {
+        [
+            Algorithm::EdgeCutRandom,
+            Algorithm::EdgeCutBfs,
+            Algorithm::Louvain,
+            Algorithm::MetisLike,
+            Algorithm::VertexCutRandom,
+            Algorithm::VertexCutDbh,
+            Algorithm::VertexCutNe,
+        ]
+    }
+
+    /// Partition `g` into segments of at most `max_size` nodes.
+    pub fn partition(
+        self,
+        g: &Csr,
+        max_size: usize,
+        rng: &mut Pcg64,
+    ) -> SegmentSet {
+        let mut set = match self {
+            Algorithm::EdgeCutRandom => edge_cut::random(g, max_size, rng),
+            Algorithm::EdgeCutBfs => edge_cut::bfs(g, max_size),
+            Algorithm::Louvain => louvain::partition(g, max_size, rng),
+            Algorithm::MetisLike => metis_like::partition(g, max_size, rng),
+            Algorithm::VertexCutRandom => {
+                vertex_cut::random(g, max_size, rng)
+            }
+            Algorithm::VertexCutDbh => vertex_cut::dbh(g, max_size),
+            Algorithm::VertexCutNe => vertex_cut::ne(g, max_size, rng),
+        };
+        enforce_max_size(g, &mut set, max_size);
+        set
+    }
+}
+
+impl SegmentSet {
+    /// Number of cut edges (edge-cut) or replicated vertices (vertex-cut) —
+    /// the partition-quality metric reported by the partitioners bench.
+    pub fn cut_cost(&self, g: &Csr) -> usize {
+        match &self.edges {
+            None => {
+                // edge-cut: edges whose endpoints land in different segments
+                let mut part = vec![u32::MAX; g.num_nodes()];
+                for (i, seg) in self.segments.iter().enumerate() {
+                    for &v in seg {
+                        part[v as usize] = i as u32;
+                    }
+                }
+                g.edges()
+                    .iter()
+                    .filter(|&&(u, v)| part[u as usize] != part[v as usize])
+                    .count()
+            }
+            Some(_) => {
+                // vertex-cut: total replicas beyond the first appearance
+                let mut seen = vec![0usize; g.num_nodes()];
+                for seg in &self.segments {
+                    for &v in seg {
+                        seen[v as usize] += 1;
+                    }
+                }
+                seen.iter().filter(|&&c| c > 0).map(|&c| c - 1).sum()
+            }
+        }
+    }
+
+    /// Check the partition contract. Returns an error string on violation.
+    pub fn validate(&self, g: &Csr, max_size: usize) -> Result<(), String> {
+        let n = g.num_nodes();
+        let mut count = vec![0usize; n];
+        for (i, seg) in self.segments.iter().enumerate() {
+            if seg.is_empty() {
+                return Err(format!("segment {i} empty"));
+            }
+            if seg.len() > max_size {
+                return Err(format!(
+                    "segment {i} has {} nodes > max {max_size}",
+                    seg.len()
+                ));
+            }
+            for w in seg.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("segment {i} not sorted/unique"));
+                }
+            }
+            for &v in seg {
+                if v as usize >= n {
+                    return Err(format!("segment {i}: node {v} out of range"));
+                }
+                count[v as usize] += 1;
+            }
+        }
+        match &self.edges {
+            None => {
+                if let Some(v) = count.iter().position(|&c| c != 1) {
+                    return Err(format!(
+                        "edge-cut: node {v} appears {} times",
+                        count[v]
+                    ));
+                }
+            }
+            Some(edge_sets) => {
+                if let Some(v) = count.iter().position(|&c| c == 0) {
+                    return Err(format!("vertex-cut: node {v} uncovered"));
+                }
+                if edge_sets.len() != self.segments.len() {
+                    return Err("edge set / segment count mismatch".into());
+                }
+                // every original edge exactly once
+                let mut all: Vec<(u32, u32)> = edge_sets
+                    .iter()
+                    .flatten()
+                    .map(|&(u, v)| (u.min(v), u.max(v)))
+                    .collect();
+                all.sort_unstable();
+                let mut orig = g.edges();
+                orig.sort_unstable();
+                if all != orig {
+                    return Err("vertex-cut: edge multiset mismatch".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Fallback guarantee: split any over-size segment into BFS chunks so the
+/// AOT fixed shapes always hold, regardless of partitioner quality.
+pub(crate) fn enforce_max_size(g: &Csr, set: &mut SegmentSet, max_size: usize) {
+    let needs_split = set.segments.iter().any(|s| s.len() > max_size);
+    if !needs_split {
+        for s in &mut set.segments {
+            s.sort_unstable();
+            s.dedup();
+        }
+        return;
+    }
+    assert!(
+        set.edges.is_none() || !needs_split,
+        "vertex-cut partitioners must respect max_size internally"
+    );
+    let mut out = Vec::new();
+    for seg in &set.segments {
+        if seg.len() <= max_size {
+            let mut s = seg.clone();
+            s.sort_unstable();
+            out.push(s);
+            continue;
+        }
+        // BFS over the induced subgraph, emitting chunks of max_size
+        let (sub, map) = g.induced(seg);
+        for chunk in edge_cut::bfs(&sub, max_size).segments {
+            let mut orig: Vec<u32> =
+                chunk.iter().map(|&i| map[i as usize]).collect();
+            orig.sort_unstable();
+            out.push(orig);
+        }
+    }
+    set.segments = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::malnet::{generate_graph, MalnetSplit};
+    use crate::testing::prop::{forall, Gen};
+
+    fn test_graph(seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed, 1);
+        generate_graph(MalnetSplit::Tiny, (seed % 5) as u8, &mut rng)
+    }
+
+    #[test]
+    fn all_algorithms_satisfy_contract() {
+        for seed in 0..3u64 {
+            let g = test_graph(seed);
+            for alg in Algorithm::all() {
+                let mut rng = Pcg64::new(seed, 7);
+                let set = alg.partition(&g, 128, &mut rng);
+                set.validate(&g, 128)
+                    .unwrap_or_else(|e| panic!("{}: {e}", alg.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn prop_max_size_always_respected() {
+        forall(
+            "segments bounded",
+            12,
+            Gen::usize(32..256),
+            |&max_size| {
+                let g = test_graph(max_size as u64);
+                Algorithm::all().iter().all(|alg| {
+                    let mut rng = Pcg64::new(max_size as u64, 3);
+                    let set = alg.partition(&g, max_size, &mut rng);
+                    set.segments.iter().all(|s| s.len() <= max_size)
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn locality_partitioners_beat_random_on_cut() {
+        let g = test_graph(1);
+        let mut rng = Pcg64::new(5, 5);
+        let cut = |alg: Algorithm, rng: &mut Pcg64| {
+            alg.partition(&g, 128, rng).cut_cost(&g)
+        };
+        let random = cut(Algorithm::EdgeCutRandom, &mut rng);
+        let metis = cut(Algorithm::MetisLike, &mut rng);
+        let louvain = cut(Algorithm::Louvain, &mut rng);
+        assert!(
+            metis < random / 2,
+            "metis-like cut {metis} vs random {random}"
+        );
+        assert!(
+            louvain < random / 2,
+            "louvain cut {louvain} vs random {random}"
+        );
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for alg in Algorithm::all() {
+            assert!(Algorithm::parse("metis").is_some());
+            let _ = alg.name();
+        }
+        assert_eq!(Algorithm::parse("metis"), Some(Algorithm::MetisLike));
+        assert_eq!(Algorithm::parse("nope"), None);
+    }
+}

@@ -1,0 +1,243 @@
+//! PJRT executable cache + tensor marshalling.
+//!
+//! One [`Engine`] per artifact variant: it owns the PJRT CPU client, lazily
+//! compiles each HLO-text function on first use, and executes with plain
+//! `Vec<f32>`/`Vec<i32>` host tensors. All outputs come back as host
+//! vectors (loss scalars, gradients, embeddings) — the coordinator is the
+//! state owner, which is what lets it average gradients across simulated
+//! devices and write embeddings into the table.
+
+use super::manifest::{Dtype, Manifest};
+use anyhow::{anyhow, bail, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// A host-side tensor heading into (or out of) an executable.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32s(&self) -> &[f32] {
+        match self {
+            HostTensor::F32(v) => v,
+            HostTensor::S32(_) => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::S32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl From<Vec<f32>> for HostTensor {
+    fn from(v: Vec<f32>) -> Self {
+        HostTensor::F32(v)
+    }
+}
+
+impl From<Vec<i32>> for HostTensor {
+    fn from(v: Vec<i32>) -> Self {
+        HostTensor::S32(v)
+    }
+}
+
+/// Borrowed input view — the zero-clone fast path for the training loop
+/// (the only remaining host copy is the literal construction itself).
+#[derive(Clone, Copy, Debug)]
+pub enum HostArg<'a> {
+    F32(&'a [f32]),
+    S32(&'a [i32]),
+}
+
+impl<'a> HostArg<'a> {
+    fn len(&self) -> usize {
+        match self {
+            HostArg::F32(v) => v.len(),
+            HostArg::S32(v) => v.len(),
+        }
+    }
+}
+
+impl<'a> From<&'a HostTensor> for HostArg<'a> {
+    fn from(t: &'a HostTensor) -> Self {
+        match t {
+            HostTensor::F32(v) => HostArg::F32(v),
+            HostTensor::S32(v) => HostArg::S32(v),
+        }
+    }
+}
+
+/// Executable cache for one artifact variant.
+pub struct Engine {
+    pub manifest: Manifest,
+    dir: String,
+    client: xla::PjRtClient,
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// cumulative executions per function (observability + perf accounting)
+    calls: RefCell<HashMap<String, usize>>,
+}
+
+impl Engine {
+    /// Open an artifact directory (compiles nothing yet).
+    pub fn open(dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            manifest,
+            dir: dir.to_string(),
+            client,
+            exes: RefCell::new(HashMap::new()),
+            calls: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (and cache) one function's HLO text.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.func(name)?;
+        let path = format!("{}/{}", self.dir, spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.exes.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of functions (so timing loops exclude compilation).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name` with positional inputs matching the manifest specs.
+    /// Returns one host tensor per manifest output. (Owning-input wrapper
+    /// over [`Engine::call_ref`].)
+    pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let args: Vec<HostArg> = inputs.iter().map(HostArg::from).collect();
+        self.call_ref(name, &args)
+    }
+
+    /// Execute with borrowed inputs — the training hot path.
+    pub fn call_ref(&self, name: &str, inputs: &[HostArg]) -> Result<Vec<HostTensor>> {
+        self.ensure_compiled(name)?;
+        let spec = self.manifest.func(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: {} inputs given, manifest wants {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        // marshal host -> literals
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, ispec) in inputs.iter().zip(&spec.inputs) {
+            if t.len() != ispec.elems() {
+                bail!(
+                    "{name}:{}: {} elems given, spec wants {:?}",
+                    ispec.name,
+                    t.len(),
+                    ispec.shape
+                );
+            }
+            let dims: Vec<i64> =
+                ispec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (t, ispec.dtype) {
+                (HostArg::F32(v), Dtype::F32) => {
+                    reshape_or_scalar(xla::Literal::vec1(v), &dims, v.len())?
+                }
+                (HostArg::S32(v), Dtype::S32) => {
+                    reshape_or_scalar(xla::Literal::vec1(v), &dims, v.len())?
+                }
+                _ => bail!("{name}:{}: dtype mismatch", ispec.name),
+            };
+            literals.push(lit);
+        }
+        *self.calls.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).expect("ensured above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple, even arity 1
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: {} outputs, manifest wants {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.into_iter().zip(&spec.outputs) {
+            let t = match ospec.dtype {
+                Dtype::F32 => HostTensor::F32(
+                    lit.to_vec::<f32>()
+                        .map_err(|e| anyhow!("{name} out: {e:?}"))?,
+                ),
+                Dtype::S32 => HostTensor::S32(
+                    lit.to_vec::<i32>()
+                        .map_err(|e| anyhow!("{name} out: {e:?}"))?,
+                ),
+            };
+            if t.len() != ospec.elems() {
+                bail!(
+                    "{name}:{}: got {} elems, spec {:?}",
+                    ospec.name,
+                    t.len(),
+                    ospec.shape
+                );
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    /// Per-function call counts since construction.
+    pub fn call_counts(&self) -> HashMap<String, usize> {
+        self.calls.borrow().clone()
+    }
+
+    pub fn dir(&self) -> &str {
+        &self.dir
+    }
+}
+
+fn reshape_or_scalar(
+    lit: xla::Literal,
+    dims: &[i64],
+    len: usize,
+) -> Result<xla::Literal> {
+    if dims.is_empty() {
+        if len != 1 {
+            bail!("scalar spec but {len} elems");
+        }
+        // rank-0: reshape to [] is valid
+        lit.reshape(&[]).map_err(|e| anyhow!("reshape scalar: {e:?}"))
+    } else {
+        lit.reshape(dims).map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+    }
+}

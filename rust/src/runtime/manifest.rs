@@ -1,0 +1,297 @@
+//! Typed view of `artifacts/<variant>/manifest.json`.
+
+use crate::segment::AdjNorm;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Tensor dtype on the wire (everything is f32 except labels).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct FnSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub head: bool,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Parsed manifest for one artifact variant.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub variant: String,
+    pub dataset: String,
+    pub backbone: String,
+    pub batch: usize,
+    pub max_nodes: usize,
+    pub feat: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub table_dim: usize,
+    pub full_jmax: usize,
+    pub adj_norm: AdjNorm,
+    pub lr: f32,
+    pub head_lr: f32,
+    pub params: Vec<ParamSpec>,
+    pub functions: BTreeMap<String, FnSpec>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let name = j.at("name").as_str().ok_or_else(|| anyhow!("spec name"))?;
+    let shape = j
+        .at("shape")
+        .as_arr()
+        .ok_or_else(|| anyhow!("spec shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("shape dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = match j.at("dtype").as_str() {
+        Some("f32") => Dtype::F32,
+        Some("s32") => Dtype::S32,
+        other => bail!("unknown dtype {other:?}"),
+    };
+    Ok(TensorSpec { name: name.to_string(), shape, dtype })
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        Manifest::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let v = j.at("variant");
+        let getu = |obj: &Json, k: &str| -> Result<usize> {
+            obj.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("missing usize `{k}`"))
+        };
+        let opt = v.at("opt");
+        let params = j
+            .at("params")
+            .as_arr()
+            .ok_or_else(|| anyhow!("params"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p
+                        .at("name")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("param name"))?
+                        .to_string(),
+                    shape: p
+                        .at("shape")
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("param shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    head: p.at("head").as_bool().unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut functions = BTreeMap::new();
+        for (name, f) in
+            j.at("functions").as_obj().ok_or_else(|| anyhow!("functions"))?
+        {
+            let inputs = f
+                .at("inputs")
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = f
+                .at("outputs")
+                .as_arr()
+                .ok_or_else(|| anyhow!("outputs"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            functions.insert(
+                name.clone(),
+                FnSpec {
+                    file: f
+                        .at("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("file"))?
+                        .to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let adj_norm_str =
+            v.at("adj_norm").as_str().ok_or_else(|| anyhow!("adj_norm"))?;
+        Ok(Manifest {
+            variant: v
+                .at("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("variant name"))?
+                .to_string(),
+            dataset: v
+                .at("dataset")
+                .as_str()
+                .ok_or_else(|| anyhow!("dataset"))?
+                .to_string(),
+            backbone: v
+                .at("backbone")
+                .as_str()
+                .ok_or_else(|| anyhow!("backbone"))?
+                .to_string(),
+            batch: getu(v, "batch")?,
+            max_nodes: getu(v, "max_nodes")?,
+            feat: getu(v, "feat")?,
+            hidden: getu(v, "hidden")?,
+            classes: getu(v, "classes")?,
+            table_dim: getu(j, "table_dim")?,
+            full_jmax: getu(j, "full_jmax")?,
+            adj_norm: AdjNorm::parse(adj_norm_str)
+                .ok_or_else(|| anyhow!("bad adj_norm {adj_norm_str}"))?,
+            lr: opt.at("lr").as_f64().ok_or_else(|| anyhow!("lr"))? as f32,
+            head_lr: opt
+                .at("head_lr")
+                .as_f64()
+                .ok_or_else(|| anyhow!("head_lr"))? as f32,
+            params,
+            functions,
+        })
+    }
+
+    pub fn func(&self, name: &str) -> Result<&FnSpec> {
+        self.functions
+            .get(name)
+            .ok_or_else(|| anyhow!("variant {} has no fn {name}", self.variant))
+    }
+
+    /// Indices (into `params`) of the prediction-head parameters.
+    pub fn head_indices(&self) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.head)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests_support {
+    use super::*;
+
+    /// A minimal hand-built manifest for unit tests that don't need HLO.
+    pub(crate) fn tiny_manifest() -> Manifest {
+        Manifest {
+            variant: "test".into(),
+            dataset: "malnet".into(),
+            backbone: "sage".into(),
+            batch: 2,
+            max_nodes: 4,
+            feat: 3,
+            hidden: 2,
+            classes: 5,
+            table_dim: 2,
+            full_jmax: 12,
+            adj_norm: AdjNorm::RowMean,
+            lr: 0.01,
+            head_lr: 0.001,
+            params: vec![
+                ParamSpec { name: "a".into(), shape: vec![2, 2], head: false },
+                ParamSpec { name: "head_b".into(), shape: vec![2], head: true },
+            ],
+            functions: BTreeMap::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "full_jmax": 12,
+      "table_dim": 64,
+      "variant": {"name":"malnet_sage_n128","dataset":"malnet",
+                  "backbone":"sage","batch":8,"max_nodes":128,"feat":16,
+                  "hidden":64,"classes":5,"mp_layers":2,
+                  "adj_norm":"row_mean",
+                  "opt":{"lr":0.01,"head_lr":0.001,"beta1":0.9,
+                         "beta2":0.999,"eps":1e-8,"weight_decay":1e-4}},
+      "params":[{"name":"pre_w","shape":[16,64],"dtype":"f32","head":false},
+                {"name":"head_w2","shape":[64,5],"dtype":"f32","head":true}],
+      "functions":{"predict":{"file":"predict.hlo.txt",
+        "inputs":[{"name":"param:head_w2","shape":[64,5],"dtype":"f32"},
+                  {"name":"h_graph","shape":[8,64],"dtype":"f32"}],
+        "outputs":[{"name":"logits","shape":[8,5],"dtype":"f32"}]}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        assert_eq!(m.variant, "malnet_sage_n128");
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.adj_norm, AdjNorm::RowMean);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.head_indices(), vec![1]);
+        let f = m.func("predict").unwrap();
+        assert_eq!(f.inputs.len(), 2);
+        assert_eq!(f.outputs[0].elems(), 40);
+        assert!((m.lr - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn missing_fn_errors() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        assert!(m.func("grad_step").is_err());
+    }
+
+    #[test]
+    fn real_artifacts_parse_if_present() {
+        let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(root).is_dir() {
+            return;
+        }
+        for entry in std::fs::read_dir(root).unwrap().flatten() {
+            let dir = entry.path();
+            if dir.join("manifest.json").is_file() {
+                let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+                assert!(!m.params.is_empty());
+                assert!(m.functions.contains_key("grad_step"));
+            }
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: load the AOT artifacts produced by `make artifacts` and
+//! execute them from the training hot path.
+//!
+//! Wire protocol (fixed by `python/compile/aot.py`):
+//! * HLO **text** files, one per function (the xla_extension 0.5.1-safe
+//!   interchange — see /opt/xla-example/README.md);
+//! * `manifest.json` describing every function's input/output tensors and
+//!   the parameter inventory (name-sorted — [`params::ParamStore`] mirrors
+//!   that order exactly);
+//! * `init_params.bin` raw f32 LE in manifest order.
+//!
+//! Python never runs at training time; this module is the entire L2/L3
+//! boundary.
+
+pub mod engine;
+pub mod manifest;
+pub mod params;
+
+pub use engine::Engine;
+pub use manifest::{FnSpec, Manifest, TensorSpec};
+pub use params::ParamStore;

@@ -1,0 +1,114 @@
+//! Host-side parameter + Adam-state store, mirroring the manifest order.
+
+use super::manifest::Manifest;
+use anyhow::{bail, Context, Result};
+
+/// Model parameters plus Adam moments, all in manifest (name-sorted) order.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub values: Vec<Vec<f32>>,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    /// Adam step counter (1-based at first apply).
+    pub t: u32,
+}
+
+impl ParamStore {
+    /// Load initial parameters from `init_params.bin`; moments start at 0.
+    pub fn load(dir: &str, manifest: &Manifest) -> Result<ParamStore> {
+        let path = format!("{dir}/init_params.bin");
+        let blob = std::fs::read(&path).with_context(|| format!("read {path}"))?;
+        let total: usize = manifest.params.iter().map(|p| p.elems()).sum();
+        if blob.len() != total * 4 {
+            bail!(
+                "{path}: {} bytes, manifest wants {}",
+                blob.len(),
+                total * 4
+            );
+        }
+        let mut values = Vec::with_capacity(manifest.params.len());
+        let mut off = 0usize;
+        for p in &manifest.params {
+            let elems = p.elems();
+            let mut v = vec![0f32; elems];
+            for (i, c) in blob[off..off + elems * 4].chunks_exact(4).enumerate()
+            {
+                v[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            off += elems * 4;
+            values.push(v);
+        }
+        let m = values.iter().map(|v| vec![0f32; v.len()]).collect();
+        let v2 = values.iter().map(|v| vec![0f32; v.len()]).collect();
+        Ok(ParamStore { values, m, v: v2, t: 0 })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.values.iter().map(|v| v.len()).sum()
+    }
+
+    /// Select a subset (e.g. head params) as (values, m, v) triples.
+    pub fn subset(&self, indices: &[usize]) -> ParamStore {
+        let pick = |src: &Vec<Vec<f32>>| -> Vec<Vec<f32>> {
+            indices.iter().map(|&i| src[i].clone()).collect()
+        };
+        ParamStore {
+            values: pick(&self.values),
+            m: pick(&self.m),
+            v: pick(&self.v),
+            t: self.t,
+        }
+    }
+
+    /// Write a subset back (inverse of [`ParamStore::subset`]).
+    pub fn write_subset(&mut self, indices: &[usize], sub: &ParamStore) {
+        assert_eq!(indices.len(), sub.values.len());
+        for (k, &i) in indices.iter().enumerate() {
+            self.values[i].copy_from_slice(&sub.values[k]);
+            self.m[i].copy_from_slice(&sub.m[k]);
+            self.v[i].copy_from_slice(&sub.v[k]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::tests_support::tiny_manifest;
+
+    #[test]
+    fn load_rejects_wrong_size() {
+        let dir = std::env::temp_dir().join("gst_params_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("init_params.bin"), [0u8; 12]).unwrap();
+        let man = tiny_manifest();
+        assert!(ParamStore::load(dir.to_str().unwrap(), &man).is_err());
+    }
+
+    #[test]
+    fn load_roundtrip_and_subset() {
+        let dir = std::env::temp_dir().join("gst_params_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let man = tiny_manifest(); // params: a [2,2] (4), head_b [2] (2)
+        let floats: Vec<f32> = (0..6).map(|x| x as f32).collect();
+        let bytes: Vec<u8> =
+            floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("init_params.bin"), bytes).unwrap();
+        let mut ps = ParamStore::load(dir.to_str().unwrap(), &man).unwrap();
+        assert_eq!(ps.values[0], vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(ps.values[1], vec![4.0, 5.0]);
+        assert_eq!(ps.total_elems(), 6);
+        // subset/write_subset roundtrip
+        let head = man.head_indices();
+        assert_eq!(head, vec![1]);
+        let mut sub = ps.subset(&head);
+        sub.values[0][0] = 99.0;
+        ps.write_subset(&head, &sub);
+        assert_eq!(ps.values[1][0], 99.0);
+        assert_eq!(ps.values[0][0], 0.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Stale Embedding Dropout (paper §3.4, Eq. 1).
+//!
+//! For a graph with J segments of which S are sampled for backprop, with
+//! keep probability p, each segment's aggregation weight η is:
+//!
+//! ```text
+//! η = p + (1-p)·J/S          for sampled (fresh) segments
+//! η = 0    with prob (1-p)   for stale segments (dropped)
+//! η = 1    with prob p       for stale segments (kept)
+//! ```
+//!
+//! Theorem 4.1: this reduces the staleness bias term by a factor of p while
+//! adding a dropout-style regularizer. p=1 degrades to plain GST+E; p=0
+//! degrades to GST-One. The trainer folds these weights into the
+//! `stale_sum`/`eta_s` inputs of the AOT `grad_step`, so the L2 graph never
+//! sees p.
+
+use crate::util::rng::Pcg64;
+
+/// The η weights for one graph's segments at one training step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SedWeights {
+    /// Weight of each sampled (fresh) segment.
+    pub eta_fresh: f32,
+    /// Weight of each stale segment (0.0 = dropped, 1.0 = kept).
+    pub eta_stale: Vec<f32>,
+}
+
+/// Draw SED weights. `j` = total segments, `sampled` = indices of the S
+/// segments receiving gradients, `p` = keep probability.
+pub fn draw(
+    j: usize,
+    sampled: &[usize],
+    p: f32,
+    rng: &mut Pcg64,
+) -> SedWeights {
+    assert!(!sampled.is_empty() && sampled.len() <= j);
+    assert!((0.0..=1.0).contains(&p));
+    let s = sampled.len();
+    let eta_fresh = p + (1.0 - p) * (j as f32) / (s as f32);
+    let mut eta_stale = vec![0.0f32; j];
+    for (idx, slot) in eta_stale.iter_mut().enumerate() {
+        if sampled.contains(&idx) {
+            *slot = 0.0; // fresh segments use eta_fresh, not this array
+        } else {
+            *slot = if rng.coin(p as f64) { 1.0 } else { 0.0 };
+        }
+    }
+    SedWeights { eta_fresh, eta_stale }
+}
+
+/// The no-SED (GST+E) weights: every stale segment kept with weight 1 and
+/// fresh segments weight 1 — the p=1 limiting case.
+pub fn keep_all(j: usize, sampled: &[usize]) -> SedWeights {
+    let mut eta_stale = vec![1.0f32; j];
+    for &s in sampled {
+        eta_stale[s] = 0.0;
+    }
+    SedWeights { eta_fresh: 1.0, eta_stale }
+}
+
+/// GST-One weights: drop every stale segment (p=0 limiting case). The
+/// fresh up-weight J/S makes the mean-pooled embedding an unbiased
+/// magnitude estimate.
+pub fn drop_all(j: usize, sampled: &[usize]) -> SedWeights {
+    let s = sampled.len();
+    SedWeights {
+        eta_fresh: (j as f32) / (s as f32),
+        eta_stale: vec![0.0; j],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{forall, zip, Gen};
+
+    #[test]
+    fn eq1_fresh_weight() {
+        let mut rng = Pcg64::new(0, 0);
+        let w = draw(8, &[3], 0.5, &mut rng);
+        assert!((w.eta_fresh - (0.5 + 0.5 * 8.0)).abs() < 1e-6);
+        assert_eq!(w.eta_stale[3], 0.0);
+    }
+
+    #[test]
+    fn limiting_cases_match_paper() {
+        let mut rng = Pcg64::new(1, 1);
+        // p=1 -> GST+E
+        let w = draw(6, &[0], 1.0, &mut rng);
+        assert_eq!(w.eta_fresh, 1.0);
+        assert!(w.eta_stale[1..].iter().all(|&e| e == 1.0));
+        assert_eq!(w, keep_all(6, &[0]));
+        // p=0 -> GST-One
+        let w = draw(6, &[2], 0.0, &mut rng);
+        assert_eq!(w.eta_fresh, 6.0);
+        assert!(w.eta_stale.iter().all(|&e| e == 0.0));
+        assert_eq!(w, drop_all(6, &[2]));
+    }
+
+    #[test]
+    fn keep_rate_matches_p() {
+        let mut rng = Pcg64::new(2, 2);
+        let p = 0.3f32;
+        let trials = 4000;
+        let mut kept = 0usize;
+        for _ in 0..trials {
+            let w = draw(10, &[0], p, &mut rng);
+            kept += w.eta_stale[1..].iter().filter(|&&e| e == 1.0).count();
+        }
+        let rate = kept as f64 / (trials * 9) as f64;
+        assert!((rate - 0.3).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn prop_expected_total_weight_is_j() {
+        // E[η_fresh·S + Σ stale η] = S(p + (1-p)J/S) + (J-S)p
+        //                          = Sp + (1-p)J + Jp - Sp = J.
+        // (This is what keeps the mean-pooled estimate unbiased in scale.)
+        forall(
+            "E[sum eta] == J",
+            6,
+            zip(Gen::usize(2..12), Gen::usize(1..100)),
+            |&(j, pseed)| {
+                let p = (pseed % 100) as f32 / 100.0;
+                let mut rng = Pcg64::new(pseed as u64, 9);
+                let trials = 6000;
+                let mut total = 0f64;
+                for _ in 0..trials {
+                    let w = draw(j, &[0], p, &mut rng);
+                    total += w.eta_fresh as f64
+                        + w.eta_stale.iter().map(|&e| e as f64).sum::<f64>();
+                }
+                let mean = total / trials as f64;
+                (mean - j as f64).abs() < 0.25 * (j as f64).sqrt()
+            },
+        );
+    }
+
+    #[test]
+    fn multi_segment_sampling() {
+        let mut rng = Pcg64::new(3, 3);
+        let w = draw(9, &[1, 4, 7], 0.5, &mut rng);
+        assert!((w.eta_fresh - (0.5 + 0.5 * 3.0)).abs() < 1e-6);
+        for &s in &[1usize, 4, 7] {
+            assert_eq!(w.eta_stale[s], 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_sample_panics() {
+        let mut rng = Pcg64::new(0, 0);
+        draw(4, &[], 0.5, &mut rng);
+    }
+}

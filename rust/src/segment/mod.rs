@@ -1,0 +1,253 @@
+//! Segment extraction and padding to the AOT fixed shapes.
+//!
+//! The L2 model consumes `(nodes [B,N,F], adj [B,N,N], mask [B,N])` with a
+//! **dense normalized adjacency** per segment — the TPU hardware adaptation
+//! (DESIGN.md §Hardware-Adaptation): GST's bounded segment size makes the
+//! dense N×N block small enough for VMEM, turning message passing into MXU
+//! matmuls instead of gather/scatter.
+//!
+//! [`SegmentedGraph`] holds one parent graph's segments (node lists, or
+//! explicit edge sets for vertex-cut) and fills caller-provided padded
+//! buffers on demand — no per-fetch allocation on the training hot path.
+
+use crate::graph::Csr;
+use crate::partition::SegmentSet;
+
+/// Which normalized adjacency the backbone expects (from the manifest).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdjNorm {
+    /// GCN: D^-1/2 (A + I) D^-1/2
+    SymSelfLoop,
+    /// SAGE/GPS: D^-1 A (row mean, no self loops)
+    RowMean,
+}
+
+impl AdjNorm {
+    pub fn parse(s: &str) -> Option<AdjNorm> {
+        match s {
+            "sym_selfloop" => Some(AdjNorm::SymSelfLoop),
+            "row_mean" => Some(AdjNorm::RowMean),
+            _ => None,
+        }
+    }
+}
+
+/// One parent graph cut into segments.
+pub struct SegmentedGraph {
+    /// Sorted node ids per segment.
+    pub segments: Vec<Vec<u32>>,
+    /// Intra-segment edges in *local* (segment-relative) indices.
+    pub local_edges: Vec<Vec<(u16, u16)>>,
+}
+
+impl SegmentedGraph {
+    /// Build from a partitioner output. Edge-cut sets use the induced
+    /// subgraph; vertex-cut sets use their explicit edge lists.
+    pub fn new(g: &Csr, set: &SegmentSet) -> SegmentedGraph {
+        let mut local_edges = Vec::with_capacity(set.segments.len());
+        for (si, seg) in set.segments.iter().enumerate() {
+            let mut rank = std::collections::HashMap::new();
+            for (i, &v) in seg.iter().enumerate() {
+                rank.insert(v, i as u16);
+            }
+            let mut edges = Vec::new();
+            match &set.edges {
+                Some(per_seg) => {
+                    for &(u, v) in &per_seg[si] {
+                        edges.push((rank[&u], rank[&v]));
+                    }
+                }
+                None => {
+                    for (i, &v) in seg.iter().enumerate() {
+                        for &w in g.neighbors(v as usize) {
+                            if let Some(&j) = rank.get(&w) {
+                                if (i as u16) < j {
+                                    edges.push((i as u16, j));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            local_edges.push(edges);
+        }
+        SegmentedGraph { segments: set.segments.clone(), local_edges }
+    }
+
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Fill one padded slot of a batch. `feats_override` substitutes the
+    /// parent graph's features (used by TpuGraphs to bake config one-hots).
+    ///
+    /// * `nodes_out`: N*F slice, zero-padded
+    /// * `adj_out`: N*N slice, normalized per `norm`, zero outside the
+    ///   real block
+    /// * `mask_out`: N slice of {0,1}
+    #[allow(clippy::too_many_arguments)]
+    pub fn fill_padded(
+        &self,
+        g: &Csr,
+        seg_idx: usize,
+        norm: AdjNorm,
+        max_nodes: usize,
+        feat_dim: usize,
+        feats_override: Option<&[f32]>,
+        nodes_out: &mut [f32],
+        adj_out: &mut [f32],
+        mask_out: &mut [f32],
+    ) {
+        let seg = &self.segments[seg_idx];
+        let n = seg.len();
+        assert!(n <= max_nodes, "segment {n} > padded {max_nodes}");
+        assert_eq!(nodes_out.len(), max_nodes * feat_dim);
+        assert_eq!(adj_out.len(), max_nodes * max_nodes);
+        assert_eq!(mask_out.len(), max_nodes);
+        nodes_out.fill(0.0);
+        adj_out.fill(0.0);
+        mask_out.fill(0.0);
+        let feats = feats_override.unwrap_or(&g.feats);
+        let fdim = g.feat_dim.min(feat_dim);
+        for (i, &v) in seg.iter().enumerate() {
+            let src = &feats[v as usize * g.feat_dim..][..fdim];
+            nodes_out[i * feat_dim..i * feat_dim + fdim].copy_from_slice(src);
+            mask_out[i] = 1.0;
+        }
+        // degree within the segment
+        let mut deg = vec![0f32; n];
+        for &(u, v) in &self.local_edges[seg_idx] {
+            deg[u as usize] += 1.0;
+            deg[v as usize] += 1.0;
+        }
+        match norm {
+            AdjNorm::SymSelfLoop => {
+                // Â = D^-1/2 (A+I) D^-1/2 with D including the self loop
+                let inv_sqrt: Vec<f32> =
+                    deg.iter().map(|&d| 1.0 / (d + 1.0).sqrt()).collect();
+                for i in 0..n {
+                    adj_out[i * max_nodes + i] = inv_sqrt[i] * inv_sqrt[i];
+                }
+                for &(u, v) in &self.local_edges[seg_idx] {
+                    let (u, v) = (u as usize, v as usize);
+                    let w = inv_sqrt[u] * inv_sqrt[v];
+                    adj_out[u * max_nodes + v] = w;
+                    adj_out[v * max_nodes + u] = w;
+                }
+            }
+            AdjNorm::RowMean => {
+                for &(u, v) in &self.local_edges[seg_idx] {
+                    let (u, v) = (u as usize, v as usize);
+                    adj_out[u * max_nodes + v] = 1.0 / deg[u].max(1.0);
+                    adj_out[v * max_nodes + u] = 1.0 / deg[v].max(1.0);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::partition::SegmentSet;
+
+    fn path4() -> Csr {
+        let mut b = GraphBuilder::new(4, 2);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 3);
+        for v in 0..4 {
+            b.set_feat(v, &[v as f32, 1.0]);
+        }
+        b.build()
+    }
+
+    fn two_segments() -> SegmentSet {
+        SegmentSet { segments: vec![vec![0, 1], vec![2, 3]], edges: None }
+    }
+
+    #[test]
+    fn local_edges_from_induced() {
+        let g = path4();
+        let sg = SegmentedGraph::new(&g, &two_segments());
+        assert_eq!(sg.local_edges[0], vec![(0, 1)]);
+        assert_eq!(sg.local_edges[1], vec![(0, 1)]);
+        // the cut edge 1-2 is dropped (the paper's ⊕ approximation)
+    }
+
+    #[test]
+    fn vertex_cut_edges_respected() {
+        let g = path4();
+        let set = SegmentSet {
+            segments: vec![vec![0, 1, 2], vec![2, 3]],
+            edges: Some(vec![vec![(0, 1), (1, 2)], vec![(2, 3)]]),
+        };
+        let sg = SegmentedGraph::new(&g, &set);
+        assert_eq!(sg.local_edges[0], vec![(0, 1), (1, 2)]);
+        assert_eq!(sg.local_edges[1], vec![(0, 1)]);
+    }
+
+    #[test]
+    fn padding_layout_and_mask() {
+        let g = path4();
+        let sg = SegmentedGraph::new(&g, &two_segments());
+        let (n, f) = (3usize, 2usize);
+        let mut nodes = vec![9.0; n * f];
+        let mut adj = vec![9.0; n * n];
+        let mut mask = vec![9.0; n];
+        sg.fill_padded(&g, 1, AdjNorm::RowMean, n, f, None, &mut nodes,
+                       &mut adj, &mut mask);
+        assert_eq!(mask, vec![1.0, 1.0, 0.0]);
+        assert_eq!(&nodes[..4], &[2.0, 1.0, 3.0, 1.0]);
+        assert_eq!(&nodes[4..], &[0.0, 0.0]); // padded row zeroed
+        // row-mean: both real nodes have in-segment degree 1
+        assert_eq!(adj[0 * n + 1], 1.0);
+        assert_eq!(adj[1 * n + 0], 1.0);
+        assert_eq!(adj[2 * n + 2], 0.0); // no self loop on padding
+    }
+
+    #[test]
+    fn sym_selfloop_rows_normalized() {
+        let g = path4();
+        let sg = SegmentedGraph::new(&g, &two_segments());
+        let n = 4usize;
+        let mut nodes = vec![0.0; n * 2];
+        let mut adj = vec![0.0; n * n];
+        let mut mask = vec![0.0; n];
+        sg.fill_padded(&g, 0, AdjNorm::SymSelfLoop, n, 2, None, &mut nodes,
+                       &mut adj, &mut mask);
+        // deg+1 = 2 for both nodes: diagonal 1/2, off-diagonal 1/2
+        assert!((adj[0] - 0.5).abs() < 1e-6);
+        assert!((adj[1] - 0.5).abs() < 1e-6);
+        assert!((adj[n + 1] - 0.5).abs() < 1e-6);
+        // padded diagonal stays zero
+        assert_eq!(adj[2 * n + 2], 0.0);
+    }
+
+    #[test]
+    fn feats_override_used() {
+        let g = path4();
+        let sg = SegmentedGraph::new(&g, &two_segments());
+        let alt = vec![7.0f32; 8];
+        let (n, f) = (2usize, 2usize);
+        let mut nodes = vec![0.0; n * f];
+        let mut adj = vec![0.0; n * n];
+        let mut mask = vec![0.0; n];
+        sg.fill_padded(&g, 0, AdjNorm::RowMean, n, f, Some(&alt), &mut nodes,
+                       &mut adj, &mut mask);
+        assert_eq!(nodes, vec![7.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "segment")]
+    fn oversize_segment_panics() {
+        let g = path4();
+        let sg = SegmentedGraph::new(&g, &two_segments());
+        let mut nodes = vec![0.0; 2];
+        let mut adj = vec![0.0; 1];
+        let mut mask = vec![0.0; 1];
+        sg.fill_padded(&g, 0, AdjNorm::RowMean, 1, 2, None, &mut nodes,
+                       &mut adj, &mut mask);
+    }
+}

@@ -1,0 +1,184 @@
+//! The historical embedding table 𝒯 : (graph i, segment j) → ℝ^d.
+//!
+//! GST+E's core data structure (paper §3.2): stores the last computed
+//! embedding of every graph segment together with the training step at
+//! which it was produced, so the trainer can (a) serve stale embeddings
+//! without recomputation and (b) quantify staleness — the most outdated
+//! entry is ≈ n·J/S steps old (paper §3.4), which the `staleness`
+//! histogram makes observable.
+//!
+//! Storage is a flat dense arena (graph → segment → d floats) sized once
+//! from the dataset's segment counts; reads hand out slices (no copies) and
+//! writes are in-place — the table is the only cross-iteration state besides
+//! model parameters, and keeping it flat makes the +F full refresh a single
+//! sequential sweep.
+
+/// Dense per-segment embedding store with version tracking.
+pub struct EmbeddingTable {
+    dim: usize,
+    /// start offset (in vectors) of each graph's segment block
+    graph_off: Vec<u32>,
+    data: Vec<f32>,
+    /// step at which each vector was last written; u32::MAX = never
+    version: Vec<u32>,
+}
+
+pub const NEVER: u32 = u32::MAX;
+
+impl EmbeddingTable {
+    /// `seg_counts[i]` = number of segments of graph i.
+    pub fn new(seg_counts: &[usize], dim: usize) -> EmbeddingTable {
+        let mut graph_off = Vec::with_capacity(seg_counts.len() + 1);
+        graph_off.push(0u32);
+        for &c in seg_counts {
+            graph_off.push(graph_off.last().unwrap() + c as u32);
+        }
+        let total = *graph_off.last().unwrap() as usize;
+        EmbeddingTable {
+            dim,
+            graph_off,
+            data: vec![0.0; total * dim],
+            version: vec![NEVER; total],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn num_graphs(&self) -> usize {
+        self.graph_off.len() - 1
+    }
+
+    pub fn segments_of(&self, graph: usize) -> usize {
+        (self.graph_off[graph + 1] - self.graph_off[graph]) as usize
+    }
+
+    fn slot(&self, graph: usize, seg: usize) -> usize {
+        debug_assert!(seg < self.segments_of(graph));
+        self.graph_off[graph] as usize + seg
+    }
+
+    /// Read the embedding — `None` until the first write.
+    pub fn get(&self, graph: usize, seg: usize) -> Option<&[f32]> {
+        let s = self.slot(graph, seg);
+        if self.version[s] == NEVER {
+            None
+        } else {
+            Some(&self.data[s * self.dim..(s + 1) * self.dim])
+        }
+    }
+
+    /// Age (in steps) of the entry at `now`, or `None` if never written.
+    pub fn staleness(&self, graph: usize, seg: usize, now: u32) -> Option<u32> {
+        let s = self.slot(graph, seg);
+        (self.version[s] != NEVER).then(|| now - self.version[s])
+    }
+
+    /// InsertOrUpdate (Alg. 2 line 7): write-back after a forward pass.
+    pub fn put(&mut self, graph: usize, seg: usize, h: &[f32], step: u32) {
+        assert_eq!(h.len(), self.dim);
+        let s = self.slot(graph, seg);
+        self.data[s * self.dim..(s + 1) * self.dim].copy_from_slice(h);
+        self.version[s] = step;
+    }
+
+    /// Fraction of entries ever written — 1.0 after the first full epoch.
+    pub fn coverage(&self) -> f64 {
+        if self.version.is_empty() {
+            return 1.0;
+        }
+        let written =
+            self.version.iter().filter(|&&v| v != NEVER).count();
+        written as f64 / self.version.len() as f64
+    }
+
+    /// Mean staleness over written entries at `now`.
+    pub fn mean_staleness(&self, now: u32) -> f64 {
+        let ages: Vec<f64> = self
+            .version
+            .iter()
+            .filter(|&&v| v != NEVER)
+            .map(|&v| (now - v) as f64)
+            .collect();
+        crate::util::stats::mean(&ages)
+    }
+
+    /// Bytes held by the table (the "memory overhead" the paper trades for
+    /// the 3× speedup — reported in the Table 3 experiment).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4 + self.version.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> EmbeddingTable {
+        EmbeddingTable::new(&[3, 1, 2], 4)
+    }
+
+    #[test]
+    fn layout_and_lookup() {
+        let mut t = table();
+        assert_eq!(t.num_graphs(), 3);
+        assert_eq!(t.segments_of(0), 3);
+        assert_eq!(t.segments_of(2), 2);
+        assert!(t.get(0, 0).is_none());
+        t.put(0, 2, &[1.0, 2.0, 3.0, 4.0], 10);
+        assert_eq!(t.get(0, 2).unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(t.get(0, 1).is_none());
+        // neighbor slots untouched
+        t.put(1, 0, &[9.0; 4], 11);
+        assert_eq!(t.get(0, 2).unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn staleness_tracks_steps() {
+        let mut t = table();
+        t.put(0, 0, &[0.0; 4], 5);
+        assert_eq!(t.staleness(0, 0, 25), Some(20));
+        assert_eq!(t.staleness(0, 1, 25), None);
+        t.put(0, 0, &[0.0; 4], 24);
+        assert_eq!(t.staleness(0, 0, 25), Some(1));
+    }
+
+    #[test]
+    fn coverage_progression() {
+        let mut t = table();
+        assert_eq!(t.coverage(), 0.0);
+        t.put(0, 0, &[0.0; 4], 0);
+        t.put(0, 1, &[0.0; 4], 0);
+        t.put(0, 2, &[0.0; 4], 0);
+        assert!((t.coverage() - 0.5).abs() < 1e-9);
+        t.put(1, 0, &[0.0; 4], 0);
+        t.put(2, 0, &[0.0; 4], 0);
+        t.put(2, 1, &[0.0; 4], 0);
+        assert_eq!(t.coverage(), 1.0);
+    }
+
+    #[test]
+    fn mean_staleness() {
+        let mut t = table();
+        t.put(0, 0, &[0.0; 4], 0);
+        t.put(1, 0, &[0.0; 4], 10);
+        assert!((t.mean_staleness(20) - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_dim_panics() {
+        let mut t = table();
+        t.put(0, 0, &[0.0; 3], 0);
+    }
+
+    #[test]
+    fn overwrite_updates_version_and_value() {
+        let mut t = table();
+        t.put(2, 1, &[1.0; 4], 1);
+        t.put(2, 1, &[2.0; 4], 9);
+        assert_eq!(t.get(2, 1).unwrap(), &[2.0; 4]);
+        assert_eq!(t.staleness(2, 1, 10), Some(1));
+    }
+}

@@ -1,0 +1,6 @@
+//! Test-support code: a small quickcheck-style property-testing framework
+//! (proptest is unavailable offline — DESIGN.md §3). Used by the module
+//! test suites for coordinator invariants: partition correctness, SED
+//! expectation laws, table consistency, padding round-trips.
+
+pub mod prop;

@@ -1,0 +1,196 @@
+//! Quickcheck-style property testing with generators and greedy shrinking.
+//!
+//! ```no_run
+//! use gst::testing::prop::{forall, Gen};
+//! forall("sorted idempotent", 100, Gen::vec_usize(0..64, 0..100), |xs| {
+//!     let mut a = xs.clone();
+//!     a.sort_unstable();
+//!     let mut b = a.clone();
+//!     b.sort_unstable();
+//!     a == b
+//! });
+//! ```
+//!
+//! On failure the input is shrunk (halving-style) and the minimal
+//! counterexample is included in the panic message.
+
+use crate::util::rng::Pcg64;
+use std::fmt::Debug;
+use std::ops::Range;
+
+/// A reusable generator of random values plus a shrinking strategy.
+pub struct Gen<T> {
+    pub sample: Box<dyn Fn(&mut Pcg64) -> T>,
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl Gen<usize> {
+    pub fn usize(range: Range<usize>) -> Gen<usize> {
+        let (lo, hi) = (range.start, range.end);
+        Gen {
+            sample: Box::new(move |rng| lo + rng.below(hi - lo)),
+            shrink: Box::new(move |&x| {
+                let mut out = vec![];
+                if x > lo {
+                    out.push(lo);
+                    out.push(lo + (x - lo) / 2);
+                    out.push(x - 1); // lets greedy descent find boundaries
+                }
+                out
+            }),
+        }
+    }
+}
+
+impl Gen<f64> {
+    pub fn f64_unit() -> Gen<f64> {
+        Gen {
+            sample: Box::new(|rng| rng.f64()),
+            shrink: Box::new(|&x| {
+                if x > 1e-9 {
+                    vec![0.0, x / 2.0]
+                } else {
+                    vec![]
+                }
+            }),
+        }
+    }
+}
+
+impl Gen<Vec<usize>> {
+    pub fn vec_usize(len: Range<usize>, val: Range<usize>) -> Gen<Vec<usize>> {
+        let (llo, lhi) = (len.start, len.end);
+        let (vlo, vhi) = (val.start, val.end);
+        Gen {
+            sample: Box::new(move |rng| {
+                let n = llo + rng.below((lhi - llo).max(1));
+                (0..n).map(|_| vlo + rng.below(vhi - vlo)).collect()
+            }),
+            shrink: Box::new(move |xs| {
+                let mut out = vec![];
+                if xs.len() > llo {
+                    out.push(xs[..(xs.len() / 2).max(llo)].to_vec());
+                    // drop each single element
+                    for i in 0..xs.len() {
+                        let mut dropped = xs.clone();
+                        dropped.remove(i);
+                        out.push(dropped);
+                    }
+                }
+                // element-wise halving toward vlo, plus single decrements
+                // so greedy descent can land exactly on failure boundaries
+                for i in 0..xs.len() {
+                    if xs[i] > vlo {
+                        let mut smaller = xs.clone();
+                        smaller[i] = vlo + (xs[i] - vlo) / 2;
+                        out.push(smaller);
+                        let mut dec = xs.clone();
+                        dec[i] -= 1;
+                        out.push(dec);
+                    }
+                }
+                out
+            }),
+        }
+    }
+}
+
+/// Pair two generators.
+pub fn zip<A: Clone + 'static, B: Clone + 'static>(
+    a: Gen<A>,
+    b: Gen<B>,
+) -> Gen<(A, B)> {
+    let (sa, sha) = (a.sample, a.shrink);
+    let (sb, shb) = (b.sample, b.shrink);
+    Gen {
+        sample: Box::new(move |rng| (sa(rng), sb(rng))),
+        shrink: Box::new(move |(x, y)| {
+            let mut out: Vec<(A, B)> =
+                sha(x).into_iter().map(|x2| (x2, y.clone())).collect();
+            out.extend(shb(y).into_iter().map(|y2| (x.clone(), y2)));
+            out
+        }),
+    }
+}
+
+/// Check `prop` on `cases` random inputs; on failure, shrink and panic with
+/// the minimal counterexample found.
+pub fn forall<T: Clone + Debug>(
+    name: &str,
+    cases: usize,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Pcg64::new(0x675f, 0x1e57);
+    for case in 0..cases {
+        let input = (gen.sample)(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(&gen, &prop, input);
+            panic!(
+                "property `{name}` failed (case {case});\n\
+                 minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Clone + Debug>(
+    gen: &Gen<T>,
+    prop: &impl Fn(&T) -> bool,
+    mut failing: T,
+) -> T {
+    // Greedy descent: keep taking the first failing shrink, up to a cap.
+    for _ in 0..1000 {
+        let candidates = (gen.shrink)(&failing);
+        match candidates.into_iter().find(|c| !prop(c)) {
+            Some(smaller) => failing = smaller,
+            None => break,
+        }
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_succeeds() {
+        forall("reverse twice", 50, Gen::vec_usize(0..20, 0..100), |xs| {
+            let mut a = xs.clone();
+            a.reverse();
+            a.reverse();
+            a == *xs
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            forall("no large elems", 100, Gen::vec_usize(0..20, 0..100), |xs| {
+                xs.iter().all(|&x| x < 50)
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // minimal counterexample should be a single element equal to 50
+        assert!(msg.contains("[50]"), "got: {msg}");
+    }
+
+    #[test]
+    fn usize_gen_respects_range() {
+        let g = Gen::usize(5..10);
+        let mut rng = Pcg64::new(1, 1);
+        for _ in 0..100 {
+            let x = (g.sample)(&mut rng);
+            assert!((5..10).contains(&x));
+        }
+    }
+
+    #[test]
+    fn zip_shrinks_both_sides() {
+        let g = zip(Gen::usize(0..100), Gen::usize(0..100));
+        let shrinks = (g.shrink)(&(40, 60));
+        assert!(shrinks.iter().any(|&(a, b)| a < 40 && b == 60));
+        assert!(shrinks.iter().any(|&(a, b)| a == 40 && b < 60));
+    }
+}

@@ -1,0 +1,189 @@
+//! The GST trainer — the paper's Layer-3 coordination contribution.
+//!
+//! [`Method`] enumerates every training regime in Tables 1–3:
+//!
+//! | method    | stale segments come from        | SED      | +F finetune |
+//! |-----------|---------------------------------|----------|-------------|
+//! | FullGraph | (all segments get gradients)    | —        | —           |
+//! | GST       | fresh forward pass (no table)   | keep all | no          |
+//! | GST-One   | dropped entirely                | drop all | no          |
+//! | GST+E     | historical table 𝒯              | keep all | no          |
+//! | GST+EF    | historical table 𝒯              | keep all | yes         |
+//! | GST+ED    | historical table 𝒯              | Eq. 1 p  | no          |
+//! | GST+EFD   | historical table 𝒯              | Eq. 1 p  | yes         |
+//!
+//! The trainers own all cross-step state (parameters, Adam moments, the
+//! embedding table) and drive the AOT executables; see DESIGN.md §6 for the
+//! method → mechanism map.
+
+pub mod malnet;
+pub mod ops;
+pub mod tpu;
+
+pub use malnet::MalnetTrainer;
+pub use tpu::TpuTrainer;
+
+use crate::partition::Algorithm;
+
+/// Training regime (paper §5.1 "Methods").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    FullGraph,
+    Gst,
+    GstOne,
+    GstE,
+    GstEF,
+    GstED,
+    GstEFD,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "full" | "full-graph" | "fullgraph" => Method::FullGraph,
+            "gst" => Method::Gst,
+            "gst-one" | "gstone" => Method::GstOne,
+            "gst+e" | "gste" => Method::GstE,
+            "gst+ef" | "gstef" => Method::GstEF,
+            "gst+ed" | "gsted" => Method::GstED,
+            "gst+efd" | "gstefd" => Method::GstEFD,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::FullGraph => "Full Graph Training",
+            Method::Gst => "GST",
+            Method::GstOne => "GST-One",
+            Method::GstE => "GST+E",
+            Method::GstEF => "GST+EF",
+            Method::GstED => "GST+ED",
+            Method::GstEFD => "GST+EFD",
+        }
+    }
+
+    /// Does this method read stale embeddings from the historical table?
+    pub fn uses_table(self) -> bool {
+        matches!(
+            self,
+            Method::GstE | Method::GstEF | Method::GstED | Method::GstEFD
+        )
+    }
+
+    /// Does this method recompute stale segments fresh each step?
+    pub fn fresh_stale(self) -> bool {
+        self == Method::Gst
+    }
+
+    /// Stale Embedding Dropout mode.
+    pub fn sed(self, keep_p: f32) -> SedMode {
+        match self {
+            Method::GstOne => SedMode::DropAll,
+            Method::GstED | Method::GstEFD => SedMode::Draw(keep_p),
+            _ => SedMode::KeepAll,
+        }
+    }
+
+    /// Does the run end with Prediction Head Finetuning?
+    pub fn finetunes(self) -> bool {
+        matches!(self, Method::GstEF | Method::GstEFD)
+    }
+
+    pub fn all() -> [Method; 7] {
+        [
+            Method::FullGraph,
+            Method::Gst,
+            Method::GstOne,
+            Method::GstE,
+            Method::GstEF,
+            Method::GstED,
+            Method::GstEFD,
+        ]
+    }
+}
+
+/// How stale-segment weights are drawn each step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SedMode {
+    KeepAll,
+    DropAll,
+    Draw(f32),
+}
+
+/// Trainer configuration (defaults follow the paper's App. B, scaled).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub method: Method,
+    pub epochs: usize,
+    /// +F finetuning epochs appended after `epochs` (paper: 100 after 600).
+    pub finetune_epochs: usize,
+    /// SED keep probability p (paper default 0.5).
+    pub keep_p: f32,
+    /// Segments sampled per graph per step (paper: S = 1).
+    pub s_per_graph: usize,
+    /// Simulated data-parallel workers (gradients averaged per step).
+    pub workers: usize,
+    pub seed: u64,
+    pub partition: Algorithm,
+    /// Evaluate every this many epochs (curve resolution).
+    pub eval_every: usize,
+    /// Override the manifest's learning rate (None = manifest value).
+    pub lr: Option<f32>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            method: Method::GstEFD,
+            epochs: 30,
+            finetune_epochs: 10,
+            keep_p: 0.5,
+            s_per_graph: 1,
+            workers: 1,
+            seed: 0,
+            partition: Algorithm::MetisLike,
+            eval_every: 5,
+            lr: None,
+        }
+    }
+}
+
+/// Result of a full training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub train_metric: f64,
+    pub test_metric: f64,
+    /// mean wall-clock per optimization step, milliseconds (Table 3)
+    pub step_ms: f64,
+    pub curve: crate::metrics::Curve,
+    /// total embed_fwd/grad_step/... invocations (runtime accounting)
+    pub call_counts: std::collections::HashMap<String, usize>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_names() {
+        for m in Method::all() {
+            let _ = m.name();
+        }
+        assert_eq!(Method::parse("GST+EFD"), Some(Method::GstEFD));
+        assert_eq!(Method::parse("full"), Some(Method::FullGraph));
+        assert_eq!(Method::parse("bogus"), None);
+    }
+
+    #[test]
+    fn method_traits_match_paper() {
+        assert!(!Method::Gst.uses_table());
+        assert!(Method::Gst.fresh_stale());
+        assert!(Method::GstEFD.uses_table());
+        assert!(Method::GstEFD.finetunes());
+        assert!(!Method::GstED.finetunes());
+        assert_eq!(Method::GstOne.sed(0.5), SedMode::DropAll);
+        assert_eq!(Method::GstE.sed(0.5), SedMode::KeepAll);
+        assert_eq!(Method::GstEFD.sed(0.7), SedMode::Draw(0.7));
+    }
+}

@@ -1,0 +1,241 @@
+//! Typed wrappers over the AOT function set: buffer packing, parameter
+//! threading, Adam state updates. Shared by both dataset trainers.
+
+use crate::runtime::engine::HostArg;
+use crate::runtime::{Engine, ParamStore};
+use anyhow::Result;
+
+/// Reusable input buffers for one `grad_step` batch (B slots).
+pub struct BatchBufs {
+    pub nodes: Vec<f32>,
+    pub adj: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub stale: Vec<f32>,
+    pub eta: Vec<f32>,
+    pub invj: Vec<f32>,
+    /// malnet: class labels (len B)
+    pub labels: Vec<i32>,
+    /// tpu: pairwise ordering mask (len B*B)
+    pub pair: Vec<f32>,
+}
+
+impl BatchBufs {
+    pub fn new(eng: &Engine) -> BatchBufs {
+        let m = &eng.manifest;
+        let (b, n, f) = (m.batch, m.max_nodes, m.feat);
+        BatchBufs {
+            nodes: vec![0.0; b * n * f],
+            adj: vec![0.0; b * n * n],
+            mask: vec![0.0; b * n],
+            stale: vec![0.0; b * m.table_dim],
+            eta: vec![1.0; b],
+            invj: vec![1.0; b],
+            labels: vec![0; b],
+            pair: vec![0.0; b * b],
+        }
+    }
+
+    /// Mutable view of slot `i`'s (nodes, adj, mask) region.
+    pub fn slot(
+        &mut self,
+        eng: &Engine,
+        i: usize,
+    ) -> (&mut [f32], &mut [f32], &mut [f32]) {
+        let m = &eng.manifest;
+        let (n, f) = (m.max_nodes, m.feat);
+        (
+            &mut self.nodes[i * n * f..(i + 1) * n * f],
+            &mut self.adj[i * n * n..(i + 1) * n * n],
+            &mut self.mask[i * n..(i + 1) * n],
+        )
+    }
+}
+
+/// Output of one grad_step call.
+pub struct StepOut {
+    pub loss: f32,
+    pub grads: Vec<Vec<f32>>,
+    /// fresh segment embeddings [B, table_dim] (write-back payload)
+    pub h_s: Vec<f32>,
+}
+
+fn params_in(ps: &ParamStore) -> Vec<HostArg<'_>> {
+    ps.values.iter().map(|v| HostArg::F32(v)).collect()
+}
+
+/// `embed_fwd` over one packed batch; returns [B, table_dim].
+pub fn embed_fwd(
+    eng: &Engine,
+    ps: &ParamStore,
+    nodes: &[f32],
+    adj: &[f32],
+    mask: &[f32],
+) -> Result<Vec<f32>> {
+    let mut inputs = params_in(ps);
+    inputs.push(HostArg::F32(nodes));
+    inputs.push(HostArg::F32(adj));
+    inputs.push(HostArg::F32(mask));
+    let out = eng.call_ref("embed_fwd", &inputs)?;
+    Ok(out[0].f32s().to_vec())
+}
+
+/// One GST gradient step over a packed batch.
+pub fn grad_step(eng: &Engine, ps: &ParamStore, bufs: &BatchBufs) -> Result<StepOut> {
+    let np = eng.manifest.params.len();
+    let mut inputs = params_in(ps);
+    inputs.push(HostArg::F32(&bufs.nodes));
+    inputs.push(HostArg::F32(&bufs.adj));
+    inputs.push(HostArg::F32(&bufs.mask));
+    inputs.push(HostArg::F32(&bufs.stale));
+    inputs.push(HostArg::F32(&bufs.eta));
+    inputs.push(HostArg::F32(&bufs.invj));
+    if eng.manifest.dataset == "malnet" {
+        inputs.push(HostArg::S32(&bufs.labels));
+    } else {
+        inputs.push(HostArg::F32(&bufs.pair));
+    }
+    let out = eng.call_ref("grad_step", &inputs)?;
+    Ok(StepOut {
+        loss: out[0].f32s()[0],
+        grads: out[1..1 + np].iter().map(|t| t.f32s().to_vec()).collect(),
+        h_s: out[1 + np].f32s().to_vec(),
+    })
+}
+
+/// Full Graph Training step over ONE graph's segments (≤ full_jmax slots).
+pub fn full_step(
+    eng: &Engine,
+    ps: &ParamStore,
+    nodes: &[f32],
+    adj: &[f32],
+    mask: &[f32],
+    seg_mask: &[f32],
+    label: i32,
+) -> Result<StepOut> {
+    let np = eng.manifest.params.len();
+    let label_buf = [label];
+    let mut inputs = params_in(ps);
+    inputs.push(HostArg::F32(nodes));
+    inputs.push(HostArg::F32(adj));
+    inputs.push(HostArg::F32(mask));
+    inputs.push(HostArg::F32(seg_mask));
+    inputs.push(HostArg::S32(&label_buf));
+    let out = eng.call_ref("full_step", &inputs)?;
+    Ok(StepOut {
+        loss: out[0].f32s()[0],
+        grads: out[1..1 + np].iter().map(|t| t.f32s().to_vec()).collect(),
+        h_s: out[1 + np].f32s().to_vec(),
+    })
+}
+
+/// Adam apply over the full parameter set; bumps `ps.t`.
+pub fn apply(
+    eng: &Engine,
+    ps: &mut ParamStore,
+    grads: &[Vec<f32>],
+    lr: f32,
+) -> Result<()> {
+    apply_named(eng, "apply_step", ps, grads, lr)
+}
+
+/// Adam apply over a subset ParamStore via a subset apply function
+/// (`head_apply_step`).
+pub fn apply_named(
+    eng: &Engine,
+    fname: &str,
+    ps: &mut ParamStore,
+    grads: &[Vec<f32>],
+    lr: f32,
+) -> Result<()> {
+    let np = ps.values.len();
+    assert_eq!(grads.len(), np);
+    ps.t += 1;
+    let t_buf = [ps.t as f32];
+    let lr_buf = [lr];
+    let mut inputs = params_in(ps);
+    inputs.extend(ps.m.iter().map(|x| HostArg::F32(x)));
+    inputs.extend(ps.v.iter().map(|x| HostArg::F32(x)));
+    inputs.extend(grads.iter().map(|g| HostArg::F32(g)));
+    inputs.push(HostArg::F32(&t_buf));
+    inputs.push(HostArg::F32(&lr_buf));
+    let out = eng.call_ref(fname, &inputs)?;
+    for i in 0..np {
+        ps.values[i].copy_from_slice(out[i].f32s());
+        ps.m[i].copy_from_slice(out[np + i].f32s());
+        ps.v[i].copy_from_slice(out[2 * np + i].f32s());
+    }
+    Ok(())
+}
+
+/// Head-only gradient step for +F finetuning (malnet).
+pub fn head_grad_step(
+    eng: &Engine,
+    head: &ParamStore,
+    h_graph: &[f32],
+    labels: &[i32],
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    let mut inputs = params_in(head);
+    inputs.push(HostArg::F32(h_graph));
+    inputs.push(HostArg::S32(labels));
+    let out = eng.call_ref("head_grad_step", &inputs)?;
+    Ok((
+        out[0].f32s()[0],
+        out[1..].iter().map(|t| t.f32s().to_vec()).collect(),
+    ))
+}
+
+/// Eval-time head: logits for a batch of aggregated graph embeddings.
+pub fn predict(
+    eng: &Engine,
+    ps: &ParamStore,
+    head_idx: &[usize],
+    h_graph: &[f32],
+) -> Result<Vec<f32>> {
+    let mut inputs: Vec<HostArg> = head_idx
+        .iter()
+        .map(|&i| HostArg::F32(&ps.values[i]))
+        .collect();
+    inputs.push(HostArg::F32(h_graph));
+    let out = eng.call_ref("predict", &inputs)?;
+    Ok(out[0].f32s().to_vec())
+}
+
+/// Elementwise-average a list of gradient sets (data-parallel reduction).
+pub fn average_grads(sets: &[Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
+    assert!(!sets.is_empty());
+    let mut out = sets[0].clone();
+    for set in &sets[1..] {
+        for (acc, g) in out.iter_mut().zip(set) {
+            for (a, &x) in acc.iter_mut().zip(g) {
+                *a += x;
+            }
+        }
+    }
+    let k = sets.len() as f32;
+    for g in &mut out {
+        for a in g {
+            *a /= k;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_grads_is_mean() {
+        let a = vec![vec![1.0f32, 2.0], vec![10.0]];
+        let b = vec![vec![3.0f32, 6.0], vec![20.0]];
+        let avg = average_grads(&[a, b]);
+        assert_eq!(avg[0], vec![2.0, 4.0]);
+        assert_eq!(avg[1], vec![15.0]);
+    }
+
+    #[test]
+    fn average_single_is_identity() {
+        let a = vec![vec![1.5f32]];
+        assert_eq!(average_grads(&[a.clone()]), a);
+    }
+}

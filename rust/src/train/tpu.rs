@@ -1,0 +1,297 @@
+//! TpuGraphs trainer: per-graph config *ranking* via pairwise hinge loss
+//! and ordered pair accuracy (Table 2, Fig 5).
+//!
+//! Paper §5.3 specifics honored here:
+//! * one 𝒢^(i) = (graph, configuration) — configs are featurized into the
+//!   node features, so the table is keyed by (graph, config, segment);
+//! * the head is inside F and F' is a parameter-free sum, so the +F
+//!   finetuning stage is omitted (GST+EFD = GST+ED here) — and the table
+//!   stores scalars (table_dim = 1);
+//! * PairwiseHinge within a batch: we batch B configs *of the same graph*
+//!   (ranking across graphs is meaningless), with the ordering mask built
+//!   from measured runtimes.
+
+use super::ops::{self, BatchBufs};
+use super::{Method, RunResult, SedMode, TrainConfig};
+use crate::datasets::TpuDataset;
+use crate::metrics::{self, Curve, StepTimer};
+use crate::runtime::{Engine, ParamStore};
+use crate::sed;
+use crate::segment::SegmentedGraph;
+use crate::table::EmbeddingTable;
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Result};
+
+pub struct TpuTrainer<'a> {
+    eng: &'a Engine,
+    data: &'a TpuDataset,
+    pub cfg: TrainConfig,
+    pub ps: ParamStore,
+    /// one partition per graph, shared by all of its configs
+    segs: Vec<SegmentedGraph>,
+    /// table rows are (graph, config) pairs: row = pair_off[g] + c
+    table: EmbeddingTable,
+    pair_off: Vec<usize>,
+    rng: Pcg64,
+    step: u32,
+    /// steps recorded during the first epoch (cold-table warmup)
+    first_epoch_steps: usize,
+    pub timer: StepTimer,
+}
+
+impl<'a> TpuTrainer<'a> {
+    pub fn new(
+        eng: &'a Engine,
+        data: &'a TpuDataset,
+        cfg: TrainConfig,
+    ) -> Result<TpuTrainer<'a>> {
+        assert_eq!(eng.manifest.dataset, "tpu");
+        if cfg.method == Method::FullGraph {
+            bail!(
+                "OOM: Full Graph Training on TpuGraphs exceeds the device \
+                 budget (paper Table 2) — no full_step artifact is built"
+            );
+        }
+        let mut rng = Pcg64::new(cfg.seed, 0x7965).stream("partition");
+        let max = eng.manifest.max_nodes;
+        let segs: Vec<SegmentedGraph> = data
+            .graphs
+            .iter()
+            .map(|g| {
+                let set = cfg.partition.partition(&g.csr, max, &mut rng);
+                SegmentedGraph::new(&g.csr, &set)
+            })
+            .collect();
+        // table: one row-block per (graph, config) pair
+        let mut counts = Vec::new();
+        let mut pair_off = Vec::with_capacity(data.graphs.len());
+        for (gi, g) in data.graphs.iter().enumerate() {
+            pair_off.push(counts.len());
+            for _ in 0..g.configs.len() {
+                counts.push(segs[gi].num_segments());
+            }
+        }
+        let table = EmbeddingTable::new(&counts, eng.manifest.table_dim);
+        let ps = ParamStore::load(eng.dir(), &eng.manifest)?;
+        eng.warmup(&["grad_step", "apply_step", "embed_fwd"])?;
+        Ok(TpuTrainer {
+            eng,
+            data,
+            cfg: cfg.clone(),
+            ps,
+            segs,
+            table,
+            pair_off,
+            rng: Pcg64::new(cfg.seed, 0x7965),
+            step: 0,
+            first_epoch_steps: 0,
+            timer: StepTimer::default(),
+        })
+    }
+
+    fn lr(&self) -> f32 {
+        self.cfg.lr.unwrap_or(self.eng.manifest.lr)
+    }
+
+    fn pair_row(&self, g: usize, c: usize) -> usize {
+        self.pair_off[g] + c
+    }
+
+    /// Train; metric = mean OPA (train subset / test set).
+    pub fn train(&mut self) -> Result<RunResult> {
+        let mut curve = Curve::default();
+        let eval_train: Vec<usize> =
+            self.data.train.iter().take(8).copied().collect();
+        for epoch in 0..self.cfg.epochs {
+            self.epoch()?;
+            if epoch == 0 {
+                self.first_epoch_steps = self.timer.count();
+            }
+            if (epoch + 1) % self.cfg.eval_every == 0
+                || epoch + 1 == self.cfg.epochs
+            {
+                let tr = self.evaluate(&eval_train)?;
+                let te = self.evaluate(&self.data.test)?;
+                curve.push(epoch + 1, tr, te);
+            }
+        }
+        let train_metric = self.evaluate(&eval_train)?;
+        let test_metric = self.evaluate(&self.data.test)?;
+        Ok(RunResult {
+            train_metric,
+            test_metric,
+            // steady-state: exclude the first epoch's cold-table steps
+            step_ms: self.timer.mean_ms_from(self.first_epoch_steps),
+            curve,
+            call_counts: self.eng.call_counts(),
+        })
+    }
+
+    /// One epoch = one ranking step per training graph.
+    fn epoch(&mut self) -> Result<()> {
+        let mut order = self.data.train.clone();
+        let mut rng = self.rng.stream(&format!("epoch{}", self.step));
+        rng.shuffle(&mut order);
+        let mut micro: Vec<Vec<Vec<f32>>> = Vec::new();
+        for &g in &order.clone() {
+            self.timer.start();
+            let grads = self.rank_step(g, &mut rng)?;
+            micro.push(grads);
+            if micro.len() == self.cfg.workers {
+                let avg = ops::average_grads(&micro);
+                let lr = self.lr();
+                ops::apply(self.eng, &mut self.ps, &avg, lr)?;
+                micro.clear();
+            }
+            self.timer.stop();
+            self.step += 1;
+        }
+        Ok(())
+    }
+
+    /// One grad_step over B configs of graph `g`.
+    fn rank_step(&mut self, g: usize, rng: &mut Pcg64) -> Result<Vec<Vec<f32>>> {
+        let m = &self.eng.manifest;
+        let b = m.batch;
+        let graph = &self.data.graphs[g];
+        let ncfg = graph.configs.len();
+        // B configs, distinct when possible
+        let configs: Vec<usize> = if ncfg >= b {
+            rng.sample_indices(ncfg, b)
+        } else {
+            (0..b).map(|i| i % ncfg).collect()
+        };
+        let j = self.segs[g].num_segments();
+        let mut bufs = BatchBufs::new(self.eng);
+        let mut sampled = vec![0usize; b];
+        let mut fresh: Vec<(usize, usize, f32)> = Vec::new(); // slot, seg, eta
+        let mut feats_cache: Vec<Vec<f32>> =
+            configs.iter().map(|&c| graph.features_for_config(c)).collect();
+        for slot in 0..b {
+            let c = configs[slot];
+            let s = rng.below(j);
+            sampled[slot] = s;
+            let w = match self.cfg.method.sed(self.cfg.keep_p) {
+                SedMode::KeepAll => sed::keep_all(j, &[s]),
+                SedMode::DropAll => sed::drop_all(j, &[s]),
+                SedMode::Draw(p) => sed::draw(j, &[s], p, rng),
+            };
+            bufs.eta[slot] = w.eta_fresh;
+            bufs.invj[slot] = 1.0; // sum pooling: no 1/J (paper §5.3)
+            let (nodes, adj, mask) = bufs.slot(self.eng, slot);
+            self.segs[g].fill_padded(
+                &graph.csr, s, m.adj_norm, m.max_nodes, m.feat,
+                Some(&feats_cache[slot]), nodes, adj, mask,
+            );
+            let row = self.pair_row(g, c);
+            for (seg, &eta) in w.eta_stale.iter().enumerate() {
+                if seg == s || eta == 0.0 {
+                    continue;
+                }
+                if !self.cfg.method.fresh_stale() {
+                    if let Some(h) = self.table.get(row, seg) {
+                        bufs.stale[slot] += eta * h[0];
+                        continue;
+                    }
+                }
+                fresh.push((slot, seg, eta));
+            }
+            // pairwise ordering mask within the batch (same graph)
+            for other in 0..b {
+                if graph.runtimes[c] > graph.runtimes[configs[other]] {
+                    bufs.pair[slot * b + other] = 1.0;
+                }
+            }
+        }
+        if !fresh.is_empty() {
+            let items: Vec<(usize, usize, usize)> = fresh
+                .iter()
+                .map(|&(slot, seg, _)| (g, configs[slot], seg))
+                .collect();
+            let embs = self.embed_many(&items, Some(&mut feats_cache))?;
+            for ((slot, seg, eta), h) in fresh.iter().zip(&embs) {
+                bufs.stale[*slot] += eta * h[0];
+                if self.cfg.method.uses_table() {
+                    self.table.put(
+                        self.pair_row(g, configs[*slot]), *seg, h, self.step,
+                    );
+                }
+            }
+        }
+        let out = ops::grad_step(self.eng, &self.ps, &bufs)?;
+        if self.cfg.method.uses_table() {
+            for slot in 0..b {
+                let h = &out.h_s[slot..slot + 1];
+                self.table.put(
+                    self.pair_row(g, configs[slot]), sampled[slot], h,
+                    self.step,
+                );
+            }
+        }
+        Ok(out.grads)
+    }
+
+    /// Fresh per-segment runtime contributions for (graph, config, seg)
+    /// triples. `feats_hint` is an optional cache keyed by slot order.
+    fn embed_many(
+        &self,
+        items: &[(usize, usize, usize)],
+        _feats_hint: Option<&mut Vec<Vec<f32>>>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let m = &self.eng.manifest;
+        let (b, n, f, td) = (m.batch, m.max_nodes, m.feat, m.table_dim);
+        let mut out = Vec::with_capacity(items.len());
+        let mut nodes = vec![0f32; b * n * f];
+        let mut adj = vec![0f32; b * n * n];
+        let mut mask = vec![0f32; b * n];
+        // cache config feature materializations within this call
+        let mut cache: std::collections::HashMap<(usize, usize), Vec<f32>> =
+            std::collections::HashMap::new();
+        for chunk in items.chunks(b) {
+            for slot in 0..b {
+                let (g, c, s) = chunk[slot.min(chunk.len() - 1)];
+                let feats = cache
+                    .entry((g, c))
+                    .or_insert_with(|| {
+                        self.data.graphs[g].features_for_config(c)
+                    })
+                    .clone();
+                self.segs[g].fill_padded(
+                    &self.data.graphs[g].csr, s, m.adj_norm, n, f,
+                    Some(&feats),
+                    &mut nodes[slot * n * f..(slot + 1) * n * f],
+                    &mut adj[slot * n * n..(slot + 1) * n * n],
+                    &mut mask[slot * n..(slot + 1) * n],
+                );
+            }
+            let h = ops::embed_fwd(self.eng, &self.ps, &nodes, &adj, &mask)?;
+            for slot in 0..chunk.len() {
+                out.push(h[slot * td..(slot + 1) * td].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Mean OPA over `graphs`: predicted runtime of each config = Σ_j r_j
+    /// with fresh embeddings (F' = sum, paper §5.3).
+    pub fn evaluate(&self, graphs: &[usize]) -> Result<f64> {
+        let mut per_graph = Vec::with_capacity(graphs.len());
+        for &g in graphs {
+            let graph = &self.data.graphs[g];
+            let j = self.segs[g].num_segments();
+            let mut items = Vec::new();
+            for c in 0..graph.configs.len() {
+                for s in 0..j {
+                    items.push((g, c, s));
+                }
+            }
+            let embs = self.embed_many(&items, None)?;
+            let mut yhat = vec![0f32; graph.configs.len()];
+            for ((_, c, _), h) in items.iter().zip(&embs) {
+                yhat[*c] += h[0];
+            }
+            per_graph.push((yhat, graph.runtimes.clone()));
+        }
+        Ok(metrics::mean_opa(&per_graph))
+    }
+}

@@ -1,0 +1,204 @@
+//! Declarative flag parser (clap is unavailable offline — DESIGN.md §3).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeated
+//! flags, positional arguments, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    takes_value: bool,
+}
+
+/// Builder-style argument parser.
+pub struct Cli {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli { program: program.into(), about: about.into(), flags: vec![] }
+    }
+
+    /// A flag that takes a value, with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            default: default.map(String::from),
+            takes_value: true,
+        });
+        self
+    }
+
+    /// A boolean switch.
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            takes_value: false,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nFLAGS:\n", self.program, self.about);
+        for f in &self.flags {
+            let d = f
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (without the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                out.values.insert(f.name.clone(), vec![d.clone()]);
+            }
+        }
+        let mut i = 0;
+        let mut defaulted: BTreeMap<&str, bool> =
+            self.flags.iter().map(|f| (f.name.as_str(), true)).collect();
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?;
+                let value = if !spec.takes_value {
+                    "true".to_string()
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("--{name} needs a value"))?
+                };
+                let entry = out.values.entry(spec.name.clone()).or_default();
+                if defaulted[spec.name.as_str()] {
+                    entry.clear();
+                    defaulted.insert(&spec.name, false);
+                }
+                entry.push(value);
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.get(name) == Some("true")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("epochs", Some("10"), "number of epochs")
+            .opt("method", None, "training method")
+            .switch("verbose", "log more")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_usize("epochs").unwrap(), 10);
+        let a = cli().parse(&argv(&["--epochs", "5"])).unwrap();
+        assert_eq!(a.get_usize("epochs").unwrap(), 5);
+        let a = cli().parse(&argv(&["--epochs=7"])).unwrap();
+        assert_eq!(a.get_usize("epochs").unwrap(), 7);
+    }
+
+    #[test]
+    fn switches_and_positionals() {
+        let a = cli().parse(&argv(&["run", "--verbose", "x"])).unwrap();
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["run", "x"]);
+        assert!(!cli().parse(&argv(&[])).unwrap().get_bool("verbose"));
+    }
+
+    #[test]
+    fn repeated_flags_collect() {
+        let a = cli()
+            .parse(&argv(&["--method", "gst", "--method", "gst+efd"]))
+            .unwrap();
+        assert_eq!(a.get_all("method"), vec!["gst", "gst+efd"]);
+        assert_eq!(a.get("method"), Some("gst+efd"));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(cli().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = cli().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--epochs"));
+    }
+}

@@ -1,0 +1,9 @@
+//! In-repo substrates replacing the usual crates (offline registry carries
+//! only the `xla` closure — see DESIGN.md §3): RNG, JSON, CLI, threading,
+//! small statistics helpers.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threads;

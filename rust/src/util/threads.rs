@@ -1,0 +1,76 @@
+//! Scoped fork-join helpers for data-parallel training (tokio is
+//! unavailable offline; the trainer's parallelism is synchronous
+//! fork-join over worker threads, which matches the paper's synchronous
+//! data-parallel SGD anyway — gradients are averaged every step).
+
+/// Run `f(worker_id)` on `n` threads and collect results in worker order.
+/// Panics in workers propagate to the caller.
+pub fn fork_join<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(n > 0);
+    if n == 1 {
+        return vec![f(0)];
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> =
+            (0..n).map(|i| scope.spawn({ let f = &f; move || f(i) })).collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+/// Split `0..len` into `n` contiguous chunks (final chunks may be smaller);
+/// used to shard minibatches across simulated devices.
+pub fn chunk_ranges(len: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(n > 0);
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let sz = base + usize::from(i < extra);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fork_join_order_and_parallelism() {
+        let out = fork_join(4, |i| i * 10);
+        assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn fork_join_single_worker_runs_inline() {
+        assert_eq!(fork_join(1, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn chunks_cover_everything() {
+        for len in [0, 1, 7, 16, 33] {
+            for n in [1, 2, 4, 5] {
+                let ranges = chunk_ranges(len, n);
+                assert_eq!(ranges.len(), n);
+                let total: usize = ranges.iter().map(|r| r.len()).sum();
+                assert_eq!(total, len);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunks_balanced() {
+        let ranges = chunk_ranges(10, 4);
+        let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Cross-module property tests on coordinator invariants: partitioning,
+//! segment padding, SED expectation laws, table/staleness accounting —
+//! the quickcheck-style suite DESIGN.md §3 promises.
+
+use gst::datasets::malnet::{generate_graph, MalnetSplit};
+use gst::datasets::{MalnetDataset, TpuDataset};
+use gst::graph::{Csr, GraphBuilder};
+use gst::partition::Algorithm;
+use gst::segment::{AdjNorm, SegmentedGraph};
+use gst::sed;
+use gst::table::EmbeddingTable;
+use gst::testing::prop::{forall, zip, Gen};
+use gst::util::rng::Pcg64;
+
+fn random_graph(seed: u64) -> Csr {
+    let mut rng = Pcg64::new(seed, 77);
+    generate_graph(MalnetSplit::Tiny, (seed % 5) as u8, &mut rng)
+}
+
+#[test]
+fn prop_partition_contract_all_algorithms() {
+    forall(
+        "partition contract",
+        10,
+        zip(Gen::usize(0..1000), Gen::usize(48..200)),
+        |&(seed, max)| {
+            let g = random_graph(seed as u64);
+            Algorithm::all().iter().all(|alg| {
+                let mut rng = Pcg64::new(seed as u64, 5);
+                alg.partition(&g, max, &mut rng).validate(&g, max).is_ok()
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_padded_rowmean_rows_sum_to_one_or_zero() {
+    forall("row-mean rows", 8, Gen::usize(0..1000), |&seed| {
+        let g = random_graph(seed as u64);
+        let mut rng = Pcg64::new(seed as u64, 3);
+        let set = Algorithm::MetisLike.partition(&g, 128, &mut rng);
+        let sg = SegmentedGraph::new(&g, &set);
+        let n = 128;
+        let mut nodes = vec![0f32; n * g.feat_dim];
+        let mut adj = vec![0f32; n * n];
+        let mut mask = vec![0f32; n];
+        for s in 0..sg.num_segments() {
+            sg.fill_padded(&g, s, AdjNorm::RowMean, n, g.feat_dim, None,
+                           &mut nodes, &mut adj, &mut mask);
+            for r in 0..n {
+                let sum: f32 = adj[r * n..(r + 1) * n].iter().sum();
+                // each row sums to 1 (has in-segment neighbors) or 0
+                if !(sum.abs() < 1e-4 || (sum - 1.0).abs() < 1e-4) {
+                    return false;
+                }
+                // padded rows must be all-zero
+                if mask[r] == 0.0 && sum.abs() > 1e-6 {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_sym_selfloop_is_symmetric() {
+    forall("sym adjacency", 8, Gen::usize(0..1000), |&seed| {
+        let g = random_graph(seed as u64);
+        let mut rng = Pcg64::new(seed as u64, 4);
+        let set = Algorithm::EdgeCutBfs.partition(&g, 96, &mut rng);
+        let sg = SegmentedGraph::new(&g, &set);
+        let n = 96;
+        let mut nodes = vec![0f32; n * g.feat_dim];
+        let mut adj = vec![0f32; n * n];
+        let mut mask = vec![0f32; n];
+        sg.fill_padded(&g, 0, AdjNorm::SymSelfLoop, n, g.feat_dim, None,
+                       &mut nodes, &mut adj, &mut mask);
+        (0..n).all(|i| {
+            (0..n).all(|j| (adj[i * n + j] - adj[j * n + i]).abs() < 1e-6)
+        })
+    });
+}
+
+#[test]
+fn prop_sed_limiting_cases() {
+    forall(
+        "sed limits",
+        30,
+        zip(Gen::usize(2..16), Gen::usize(0..1000)),
+        |&(j, seed)| {
+            let mut rng = Pcg64::new(seed as u64, 6);
+            let s = seed % j;
+            let p0 = sed::draw(j, &[s], 0.0, &mut rng);
+            let p1 = sed::draw(j, &[s], 1.0, &mut rng);
+            p0 == sed::drop_all(j, &[s]) && p1 == sed::keep_all(j, &[s])
+        },
+    );
+}
+
+#[test]
+fn prop_table_roundtrip_any_layout() {
+    forall(
+        "table roundtrip",
+        20,
+        zip(Gen::vec_usize(1..8, 1..12), Gen::usize(1..64)),
+        |&(ref counts, dim)| {
+            let mut t = EmbeddingTable::new(counts, dim);
+            let mut rng = Pcg64::new(dim as u64, 1);
+            for (g, &c) in counts.iter().enumerate() {
+                for s in 0..c {
+                    let v: Vec<f32> =
+                        (0..dim).map(|_| rng.f32()).collect();
+                    t.put(g, s, &v, (g * 100 + s) as u32);
+                    if t.get(g, s).unwrap() != &v[..] {
+                        return false;
+                    }
+                }
+            }
+            t.coverage() == 1.0
+        },
+    );
+}
+
+#[test]
+fn prop_generators_deterministic_and_bounded() {
+    forall("malnet bounded", 6, Gen::usize(0..100), |&seed| {
+        let a = MalnetDataset::generate(MalnetSplit::Tiny, 10, seed as u64);
+        let b = MalnetDataset::generate(MalnetSplit::Tiny, 10, seed as u64);
+        a.graphs.iter().zip(&b.graphs).all(|(x, y)| x == y)
+            && a.graphs.iter().all(|g| g.num_nodes() <= 1_200)
+    });
+}
+
+#[test]
+fn prop_tpu_pairmask_consistent_with_runtimes() {
+    forall("tpu runtimes", 6, Gen::usize(0..100), |&seed| {
+        let d = TpuDataset::generate(2, 6, seed as u64);
+        d.graphs.iter().all(|g| {
+            g.runtimes.iter().all(|r| r.is_finite() && *r > 0.0)
+        })
+    });
+}
+
+#[test]
+fn vertex_cut_segments_cover_every_edge_endpoint() {
+    // failure-injection style: a pathological star + chain graph
+    let mut b = GraphBuilder::new(40, 0);
+    for leaf in 1..30 {
+        b.add_edge(0, leaf);
+    }
+    for i in 30..39 {
+        b.add_edge(i, i + 1);
+    }
+    let g = b.build();
+    for alg in [
+        Algorithm::VertexCutRandom,
+        Algorithm::VertexCutDbh,
+        Algorithm::VertexCutNe,
+    ] {
+        let mut rng = Pcg64::new(1, 1);
+        let set = alg.partition(&g, 16, &mut rng);
+        set.validate(&g, 16)
+            .unwrap_or_else(|e| panic!("{}: {e}", alg.name()));
+        let sg = SegmentedGraph::new(&g, &set);
+        // every segment's local edges must reference in-range local ids
+        for (si, edges) in sg.local_edges.iter().enumerate() {
+            let n = sg.segments[si].len();
+            for &(u, v) in edges {
+                assert!((u as usize) < n && (v as usize) < n);
+            }
+        }
+    }
+}
+
+#[test]
+fn enormous_segment_request_clamps_to_one_segment() {
+    let g = random_graph(5);
+    let mut rng = Pcg64::new(0, 0);
+    for alg in [Algorithm::MetisLike, Algorithm::Louvain, Algorithm::EdgeCutBfs]
+    {
+        let set = alg.partition(&g, 1_000_000, &mut rng);
+        assert_eq!(set.segments.len(), 1, "{}", alg.name());
+        assert_eq!(set.segments[0].len(), g.num_nodes());
+    }
+}
+
+#[test]
+fn max_size_one_is_all_singletons() {
+    let g = random_graph(6);
+    let mut rng = Pcg64::new(0, 0);
+    let set = Algorithm::EdgeCutBfs.partition(&g, 1, &mut rng);
+    set.validate(&g, 1).unwrap();
+    assert_eq!(set.segments.len(), g.num_nodes());
+}

@@ -1,0 +1,60 @@
+//! Full-pipeline smoke: run experiment drivers end-to-end at quick sizing.
+//! This is the test that proves all layers compose: synthetic data ->
+//! partitioners -> padded segments -> PJRT train/eval -> metrics -> JSON.
+
+use gst::exp::{self, common::Env};
+
+fn artifacts_ready() -> bool {
+    let d = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/malnet_sage_n128");
+    std::path::Path::new(d).is_dir()
+}
+
+fn env() -> Env {
+    let art = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let out = std::env::temp_dir().join("gst_e2e_runs");
+    Env::new(art, out.to_str().unwrap(), true).unwrap()
+}
+
+#[test]
+fn table4_and_table6_quick() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let e = env();
+    exp::run("table4", &e).unwrap();
+    let saved = format!("{}/table4.json", e.out_dir);
+    let j = gst::util::json::Json::parse(
+        &std::fs::read_to_string(&saved).unwrap(),
+    )
+    .unwrap();
+    assert!(j.at("malnet_large").at("avg_nodes").as_f64().unwrap() > 500.0);
+}
+
+#[test]
+fn fig3_quick_sed_sweep() {
+    if !artifacts_ready() {
+        return;
+    }
+    let e = env();
+    exp::run("fig3", &e).unwrap();
+    let j = gst::util::json::Json::parse(
+        &std::fs::read_to_string(format!("{}/fig3.json", e.out_dir))
+            .unwrap(),
+    )
+    .unwrap();
+    let arr = j.as_arr().unwrap();
+    assert_eq!(arr.len(), 5); // p in {0, .25, .5, .75, 1}
+    for p in arr {
+        for v in p.at("acc").as_arr().unwrap() {
+            let acc = v.as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&acc));
+        }
+    }
+}
+
+#[test]
+fn unknown_experiment_rejected() {
+    let e = env();
+    assert!(exp::run("table99", &e).is_err());
+}

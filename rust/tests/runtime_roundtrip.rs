@@ -1,0 +1,193 @@
+//! Integration: load the real AOT artifacts through PJRT and check numerics
+//! against the L2 semantics (python/tests/test_aot.py validated jit==eager;
+//! here we validate text-load==jit by exercising known identities).
+//!
+//! Requires `make artifacts` to have produced artifacts/malnet_sage_n128.
+
+use gst::runtime::engine::HostTensor;
+use gst::runtime::{Engine, ParamStore};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/malnet_sage_n128");
+    std::path::Path::new(dir).is_dir().then(|| dir.to_string())
+}
+
+fn param_inputs(ps: &ParamStore) -> Vec<HostTensor> {
+    ps.values.iter().map(|v| HostTensor::F32(v.clone())).collect()
+}
+
+#[test]
+fn embed_fwd_masked_mean_properties() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let eng = Engine::open(&dir).unwrap();
+    let m = &eng.manifest;
+    let (b, n, f, h) = (m.batch, m.max_nodes, m.feat, m.hidden);
+    let ps = ParamStore::load(&dir, m).unwrap();
+
+    // identical inputs in every batch slot must give identical embeddings
+    let mut nodes = vec![0f32; b * n * f];
+    let adj = vec![0f32; b * n * n];
+    let mut mask = vec![0f32; b * n];
+    for slot in 0..b {
+        for v in 0..4 {
+            mask[slot * n + v] = 1.0;
+            for d in 0..f {
+                nodes[(slot * n + v) * f + d] = (v * f + d) as f32 * 0.01;
+            }
+        }
+    }
+    let mut inputs = param_inputs(&ps);
+    inputs.push(nodes.clone().into());
+    inputs.push(adj.clone().into());
+    inputs.push(mask.clone().into());
+    let out = eng.call("embed_fwd", &inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    let emb = out[0].f32s();
+    assert_eq!(emb.len(), b * h);
+    for slot in 1..b {
+        for d in 0..h {
+            assert!(
+                (emb[d] - emb[slot * h + d]).abs() < 1e-5,
+                "slot {slot} dim {d}: {} vs {}",
+                emb[d],
+                emb[slot * h + d]
+            );
+        }
+    }
+    assert!(emb.iter().all(|x| x.is_finite()));
+
+    // changing features of MASKED nodes must not change the embedding
+    let mut nodes2 = nodes.clone();
+    for slot in 0..b {
+        for v in 4..n {
+            for d in 0..f {
+                nodes2[(slot * n + v) * f + d] = 7.5;
+            }
+        }
+    }
+    let mut inputs2 = param_inputs(&ps);
+    inputs2.push(nodes2.into());
+    inputs2.push(adj.into());
+    inputs2.push(mask.into());
+    let out2 = eng.call("embed_fwd", &inputs2).unwrap();
+    let emb2 = out2[0].f32s();
+    for i in 0..b * h {
+        assert!((emb[i] - emb2[i]).abs() < 1e-4, "padding leaked at {i}");
+    }
+}
+
+#[test]
+fn grad_step_then_apply_reduces_loss() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let eng = Engine::open(&dir).unwrap();
+    let m = &eng.manifest;
+    let (b, n, f, h) = (m.batch, m.max_nodes, m.feat, m.hidden);
+    let mut ps = ParamStore::load(&dir, m).unwrap();
+    let np = m.params.len();
+
+    // fixed batch: random-ish but deterministic features, J=1 per graph
+    let mut nodes = vec![0f32; b * n * f];
+    for (i, x) in nodes.iter_mut().enumerate() {
+        *x = ((i * 2654435761) % 1000) as f32 / 1000.0 - 0.5;
+    }
+    let mut adj = vec![0f32; b * n * n];
+    for g in 0..b {
+        for v in 0..15 {
+            adj[g * n * n + v * n + v + 1] = 1.0;
+            adj[g * n * n + (v + 1) * n + v] = 1.0;
+        }
+    }
+    let mut mask = vec![0f32; b * n];
+    for g in 0..b {
+        for v in 0..16 {
+            mask[g * n + v] = 1.0;
+        }
+    }
+    let stale = vec![0f32; b * h];
+    let eta = vec![1f32; b];
+    let invj = vec![1f32; b];
+    let labels: Vec<i32> = (0..b as i32).map(|i| i % 5).collect();
+
+    let run_step = |ps: &ParamStore| -> (f32, Vec<HostTensor>) {
+        let mut inputs = param_inputs(ps);
+        inputs.push(nodes.clone().into());
+        inputs.push(adj.clone().into());
+        inputs.push(mask.clone().into());
+        inputs.push(stale.clone().into());
+        inputs.push(eta.clone().into());
+        inputs.push(invj.clone().into());
+        inputs.push(labels.clone().into());
+        let out = eng.call("grad_step", &inputs).unwrap();
+        let loss = out[0].f32s()[0];
+        (loss, out)
+    };
+
+    let (loss0, out) = run_step(&ps);
+    assert!(loss0.is_finite() && loss0 > 0.0);
+    // h_s output has table_dim
+    assert_eq!(out.last().unwrap().len(), b * m.table_dim);
+
+    // 30 SGD steps on the same batch must reduce the loss substantially
+    let mut loss_prev = loss0;
+    for step in 1..=30 {
+        let (_, out) = run_step(&ps);
+        let grads: Vec<HostTensor> = out[1..1 + np].to_vec();
+        let mut inputs: Vec<HostTensor> = param_inputs(&ps);
+        inputs.extend(ps.m.iter().map(|x| HostTensor::F32(x.clone())));
+        inputs.extend(ps.v.iter().map(|x| HostTensor::F32(x.clone())));
+        inputs.extend(grads);
+        inputs.push(HostTensor::F32(vec![step as f32]));
+        inputs.push(HostTensor::F32(vec![eng.manifest.lr]));
+        let new = eng.call("apply_step", &inputs).unwrap();
+        for i in 0..np {
+            ps.values[i] = new[i].f32s().to_vec();
+            ps.m[i] = new[np + i].f32s().to_vec();
+            ps.v[i] = new[2 * np + i].f32s().to_vec();
+        }
+        loss_prev = run_step(&ps).0;
+    }
+    // 30 Adam steps at the manifest lr (1e-3) cut this fixed-batch loss
+    // by ~1/3; demand a robust 20% drop (a broken grad/apply path shows
+    // flat or rising loss)
+    assert!(
+        loss_prev < loss0 * 0.8,
+        "loss did not drop: {loss0} -> {loss_prev}"
+    );
+}
+
+#[test]
+fn predict_uses_head_params_only() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let eng = Engine::open(&dir).unwrap();
+    let m = &eng.manifest;
+    let ps = ParamStore::load(&dir, m).unwrap();
+    let head = m.head_indices();
+    let (b, h, c) = (m.batch, m.hidden, m.classes);
+    let hg: Vec<f32> = (0..b * h).map(|i| (i % 13) as f32 * 0.05).collect();
+    let mut inputs: Vec<HostTensor> =
+        head.iter().map(|&i| HostTensor::F32(ps.values[i].clone())).collect();
+    inputs.push(hg.into());
+    let out = eng.call("predict", &inputs).unwrap();
+    let logits = out[0].f32s();
+    assert_eq!(logits.len(), b * c);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn bad_input_arity_is_rejected() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let eng = Engine::open(&dir).unwrap();
+    assert!(eng.call("predict", &[]).is_err());
+}

@@ -1,0 +1,147 @@
+//! End-to-end trainer integration over the real AOT artifacts: every
+//! method on a small synthetic MalNet, plus the TpuGraphs ranking path.
+
+use gst::datasets::{MalnetDataset, MalnetSplit, TpuDataset};
+use gst::partition::Algorithm;
+use gst::runtime::Engine;
+use gst::train::{MalnetTrainer, Method, TpuTrainer, TrainConfig};
+
+fn dir(v: &str) -> Option<String> {
+    let d = format!("{}/artifacts/{v}", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&d).is_dir().then_some(d)
+}
+
+fn quick_cfg(method: Method) -> TrainConfig {
+    TrainConfig {
+        method,
+        epochs: 2,
+        finetune_epochs: 1,
+        eval_every: 2,
+        seed: 1,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn every_method_trains_on_malnet_tiny() {
+    let Some(d) = dir("malnet_sage_n128") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let eng = Engine::open(&d).unwrap();
+    let data = MalnetDataset::generate(MalnetSplit::Tiny, 40, 3);
+    for method in [
+        Method::FullGraph,
+        Method::Gst,
+        Method::GstOne,
+        Method::GstE,
+        Method::GstEFD,
+    ] {
+        let mut tr =
+            MalnetTrainer::new(&eng, &data, quick_cfg(method)).unwrap();
+        let res = tr.train().unwrap_or_else(|e| panic!("{method:?}: {e}"));
+        assert!(
+            res.test_metric.is_finite() && res.test_metric >= 0.0,
+            "{method:?}"
+        );
+        assert!(res.step_ms > 0.0, "{method:?} recorded no steps");
+        assert!(!res.curve.epochs.is_empty());
+    }
+}
+
+#[test]
+fn table_methods_fill_the_table() {
+    let Some(d) = dir("malnet_sage_n128") else {
+        return;
+    };
+    let eng = Engine::open(&d).unwrap();
+    let data = MalnetDataset::generate(MalnetSplit::Tiny, 30, 5);
+    let mut tr =
+        MalnetTrainer::new(&eng, &data, quick_cfg(Method::GstE)).unwrap();
+    assert_eq!(tr.table.coverage(), 0.0);
+    tr.train().unwrap();
+    // every training-graph segment sampled or cold-read at least once in
+    // two epochs -> coverage well above zero (test graphs are never written)
+    assert!(tr.table.coverage() > 0.2, "coverage {}", tr.table.coverage());
+}
+
+#[test]
+fn gst_does_more_embed_calls_than_gst_e() {
+    let Some(d) = dir("malnet_sage_n128") else {
+        return;
+    };
+    let data = MalnetDataset::generate(MalnetSplit::Tiny, 30, 7);
+    let count = |method: Method| {
+        let eng = Engine::open(&d).unwrap();
+        let mut cfg = quick_cfg(method);
+        cfg.eval_every = 99; // isolate the training loop from eval calls
+        let mut tr = MalnetTrainer::new(&eng, &data, cfg).unwrap();
+        tr.train().unwrap();
+        *eng.call_counts().get("embed_fwd").unwrap_or(&0)
+    };
+    let gst = count(Method::Gst);
+    let gste = count(Method::GstE);
+    assert!(
+        gst > gste,
+        "GST should recompute stale segments every step: {gst} vs {gste}"
+    );
+}
+
+#[test]
+fn full_graph_ooms_on_large_graphs() {
+    let Some(d) = dir("malnet_sage_n128") else {
+        return;
+    };
+    let eng = Engine::open(&d).unwrap();
+    // the large split has graphs with far more than full_jmax segments
+    let data = MalnetDataset::generate(MalnetSplit::Large, 10, 1);
+    let err = MalnetTrainer::new(&eng, &data, quick_cfg(Method::FullGraph))
+        .err()
+        .expect("must OOM");
+    assert!(err.to_string().contains("OOM"), "{err}");
+}
+
+#[test]
+fn determinism_same_seed_same_result() {
+    let Some(d) = dir("malnet_sage_n128") else {
+        return;
+    };
+    let eng = Engine::open(&d).unwrap();
+    let data = MalnetDataset::generate(MalnetSplit::Tiny, 30, 9);
+    let run = || {
+        let mut tr =
+            MalnetTrainer::new(&eng, &data, quick_cfg(Method::GstEFD))
+                .unwrap();
+        tr.train().unwrap().test_metric
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn tpu_ranking_trains_and_scores_opa() {
+    let Some(d) = dir("tpu_sage_n128") else {
+        eprintln!("skipping: tpu artifacts not built");
+        return;
+    };
+    let eng = Engine::open(&d).unwrap();
+    let data = TpuDataset::generate(6, 6, 11);
+    let mut cfg = quick_cfg(Method::GstED);
+    cfg.partition = Algorithm::MetisLike;
+    let mut tr = TpuTrainer::new(&eng, &data, cfg).unwrap();
+    let res = tr.train().unwrap();
+    assert!((0.0..=1.0).contains(&res.test_metric), "{}", res.test_metric);
+    assert!(res.step_ms > 0.0);
+}
+
+#[test]
+fn tpu_rejects_full_graph() {
+    let Some(d) = dir("tpu_sage_n128") else {
+        return;
+    };
+    let eng = Engine::open(&d).unwrap();
+    let data = TpuDataset::generate(2, 2, 1);
+    let err = TpuTrainer::new(&eng, &data, quick_cfg(Method::FullGraph))
+        .err()
+        .expect("must OOM");
+    assert!(err.to_string().contains("OOM"));
+}
