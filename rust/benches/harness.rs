@@ -87,3 +87,32 @@ pub fn artifacts(variant: &str) -> Option<String> {
     let d = format!("{}/artifacts/{variant}", env!("CARGO_MANIFEST_DIR"));
     std::path::Path::new(&d).is_dir().then_some(d)
 }
+
+/// Write a bench's (label, mean ms) series as a perf-trajectory JSON
+/// record (`BENCH_<name>.json`, or `$BENCH_OUT/BENCH_<name>.json`), the
+/// format CI accumulates run over run. A run that had to skip (artifacts
+/// not built) still writes the file with `skipped: true` so the
+/// trajectory has no silent holes.
+pub fn emit_json(name: &str, entries: &[(String, f64)], skipped: bool) {
+    use gst::util::json::Json;
+    let payload = Json::obj(vec![
+        ("bench", Json::str(name)),
+        ("unit", Json::str("ms")),
+        ("skipped", Json::Bool(skipped)),
+        (
+            "results",
+            Json::arr(entries.iter().map(|(label, ms)| {
+                Json::obj(vec![
+                    ("label", Json::str(label)),
+                    ("mean_ms", Json::num(*ms)),
+                ])
+            })),
+        ),
+    ]);
+    let dir = std::env::var("BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let path = format!("{dir}/BENCH_{name}.json");
+    match std::fs::write(&path, payload.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("emit_json: {path}: {e}"),
+    }
+}

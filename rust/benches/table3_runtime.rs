@@ -1,6 +1,7 @@
 //! Table 3 bench: average training time per iteration on MalNet-Large,
 //! per method. This is the wall-clock claim behind "GST+EFD is 3x faster
 //! than GST": GST re-encodes every stale segment, the table methods don't.
+//! Emits BENCH_step_ms.json for the CI perf trajectory.
 //!
 //!     cargo bench --bench table3_runtime
 
@@ -14,10 +15,12 @@ use gst::train::{MalnetTrainer, Method, TrainConfig};
 fn main() {
     let Some(dir) = harness::artifacts("malnet_sage_n128") else {
         println!("table3_runtime: artifacts not built, skipping");
+        harness::emit_json("step_ms", &[], true);
         return;
     };
     let eng = Engine::open(&dir).unwrap();
     let data = MalnetDataset::generate(MalnetSplit::Large, 18, 0);
+    let mut series = Vec::new();
     println!("\nTable 3 (per-iteration train time, MalNet-Large, SAGE):");
     for method in
         [Method::Gst, Method::GstOne, Method::GstE, Method::GstEFD]
@@ -39,5 +42,7 @@ fn main() {
             res.call_counts.get("grad_step").unwrap_or(&0),
             res.call_counts.get("embed_fwd").unwrap_or(&0),
         );
+        series.push((method.name().to_string(), res.step_ms));
     }
+    harness::emit_json("step_ms", &series, false);
 }

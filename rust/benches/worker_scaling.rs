@@ -1,0 +1,54 @@
+//! Data-parallel worker scaling: per-step wall clock for a fixed
+//! 4-micro-batch optimizer step as fork-join threads are added — the
+//! hot-path speedup the `GstCore` refactor buys. Also asserts the
+//! worker-invariance guarantee (identical test metric across the sweep).
+//! Emits BENCH_worker_scaling.json for the CI perf trajectory.
+//!
+//!     cargo bench --bench worker_scaling
+
+#[path = "harness.rs"]
+mod harness;
+
+use gst::datasets::{MalnetDataset, MalnetSplit};
+use gst::runtime::Engine;
+use gst::train::{MalnetTrainer, Method, TrainConfig};
+
+fn main() {
+    let Some(dir) = harness::artifacts("malnet_sage_n128") else {
+        println!("worker_scaling: artifacts not built, skipping");
+        harness::emit_json("worker_scaling", &[], true);
+        return;
+    };
+    let eng = Engine::open(&dir).unwrap();
+    let data = MalnetDataset::generate(MalnetSplit::Tiny, 40, 0);
+    let mut series = Vec::new();
+    let mut metrics = Vec::new();
+    println!("\nworker scaling (4 micro-batches/step, GST+ED, malnet-tiny):");
+    for workers in [1usize, 2, 4] {
+        let cfg = TrainConfig {
+            method: Method::GstED,
+            epochs: 4,
+            finetune_epochs: 0,
+            eval_every: 99,
+            seed: 0,
+            workers,
+            micro_batches: 4,
+            ..TrainConfig::default()
+        };
+        let mut tr = MalnetTrainer::new(&eng, &data, cfg).unwrap();
+        let res = tr.train().unwrap();
+        println!(
+            "{:<44} {:>10.1} ms/step (test {:.4})",
+            format!("workers={workers}"),
+            res.step_ms,
+            res.test_metric,
+        );
+        series.push((format!("workers={workers}"), res.step_ms));
+        metrics.push(res.test_metric);
+    }
+    assert!(
+        metrics.iter().all(|&m| m == metrics[0]),
+        "worker-count invariance violated: {metrics:?}"
+    );
+    harness::emit_json("worker_scaling", &series, false);
+}

@@ -3,14 +3,15 @@
 
 pub mod common;
 pub mod figs;
+pub mod scaling;
 pub mod tables;
 
 use anyhow::{bail, Result};
 use common::Env;
 
-pub const ALL_IDS: [&str; 10] = [
+pub const ALL_IDS: [&str; 11] = [
     "table1", "table2", "table3", "table4", "table6", "fig2", "fig3",
-    "fig4", "fig5", "fig6",
+    "fig4", "fig5", "fig6", "scaling",
 ];
 
 /// Run one experiment by id.
@@ -26,6 +27,7 @@ pub fn run(id: &str, env: &Env) -> Result<()> {
         "fig4" => figs::fig4(env),
         "fig5" => figs::fig5(env),
         "fig6" => figs::fig6(env),
+        "scaling" => scaling::scaling(env),
         other => bail!("unknown experiment `{other}`; known: {ALL_IDS:?}"),
     }
 }

@@ -1,0 +1,71 @@
+//! Data-parallel scaling driver (beyond the paper): step time vs worker
+//! threads at a fixed micro-batch count, plus the worker-invariance check
+//! — the refactor's observable guarantees in one report.
+//!
+//! `workers` is a pure execution knob in the refactored core, so the test
+//! metric must be bit-identical across the sweep while `step_ms` drops as
+//! threads are added; this driver asserts the former and records the
+//! latter (the perf trajectory CI tracks via BENCH_step_ms.json).
+
+use super::common::*;
+use crate::datasets::malnet::MalnetSplit;
+use crate::train::{Method, TrainConfig};
+use crate::util::json::Json;
+use anyhow::{ensure, Result};
+
+const MICRO_BATCHES: usize = 4;
+const WORKER_SWEEP: [usize; 3] = [1, 2, 4];
+
+pub fn scaling(env: &Env) -> Result<()> {
+    let eng = env.engine("malnet_sage_n128")?;
+    let data = env.malnet(MalnetSplit::Tiny, 0);
+    let mut rows = Vec::new();
+    let mut metrics = Vec::new();
+    for &workers in &WORKER_SWEEP {
+        let cfg = TrainConfig {
+            method: Method::GstED,
+            epochs: 4.min(env.profile.epochs.max(2)),
+            finetune_epochs: 0,
+            eval_every: 99,
+            seed: 0,
+            workers,
+            micro_batches: MICRO_BATCHES,
+            ..TrainConfig::default()
+        };
+        let res = run_malnet(&eng, &data, cfg)?;
+        metrics.push(res.test_metric);
+        rows.push((workers, res.step_ms, res.test_metric));
+    }
+    ensure!(
+        metrics.iter().all(|&m| m == metrics[0]),
+        "worker-count invariance violated: {metrics:?}"
+    );
+    println!(
+        "\n=== Scaling: {MICRO_BATCHES} micro-batches over worker \
+         threads (GST+ED, SAGE, malnet-tiny) ==="
+    );
+    println!("{:>8} {:>12} {:>10}", "workers", "ms/step", "test acc");
+    for (w, ms, acc) in &rows {
+        println!("{w:>8} {ms:>12.2} {acc:>10.4}");
+    }
+    println!("(test acc identical across the sweep: threads are an \
+              execution knob, micro-batches the semantic one)");
+    let path = env.save(
+        "scaling",
+        Json::obj(vec![
+            ("micro_batches", Json::num(MICRO_BATCHES as f64)),
+            (
+                "sweep",
+                Json::arr(rows.iter().map(|(w, ms, acc)| {
+                    Json::obj(vec![
+                        ("workers", Json::num(*w as f64)),
+                        ("step_ms", Json::num(*ms)),
+                        ("test_metric", Json::num(*acc)),
+                    ])
+                })),
+            ),
+        ]),
+    )?;
+    println!("saved {path}");
+    Ok(())
+}

@@ -51,7 +51,8 @@ fn usage() -> String {
          COMMANDS:\n\
          \x20 experiment --id <{}|all> [--quick] [--artifacts DIR] [--out DIR]\n\
          \x20 train --dataset <malnet-tiny|malnet-large|tpu> --method <full|gst|gst-one|gst+e|gst+ef|gst+ed|gst+efd>\n\
-         \x20       [--backbone gcn|sage|gps] [--epochs N] [--keep-p P] [--partition ALG] [--seed S] [--workers W]\n\
+         \x20       [--backbone gcn|sage|gps] [--epochs N] [--keep-p P] [--partition ALG] [--seed S]\n\
+         \x20       [--micro-batches M] [--workers W]\n\
          \x20 data-stats [--graphs N]\n\
          \x20 partition [--alg ALG] [--max-size N]\n\
          \x20 memory",
@@ -92,7 +93,12 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("keep-p", Some("0.5"), "SED keep probability")
         .opt("partition", Some("metis"), "partition algorithm")
         .opt("seed", Some("0"), "RNG seed")
-        .opt("workers", Some("1"), "simulated data-parallel workers")
+        .opt(
+            "micro-batches",
+            Some("1"),
+            "micro-batches (simulated devices) averaged per step",
+        )
+        .opt("workers", Some("1"), "worker threads (execution only)")
         .opt("graphs", Some("60"), "synthetic dataset size")
         .opt("artifacts", Some("artifacts"), "AOT artifact root")
         .opt("max-nodes", Some("128"), "segment size variant (32|64|128|256)")
@@ -110,6 +116,9 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         keep_p: args.get_f64("keep-p").map_err(|e| anyhow!(e))? as f32,
         s_per_graph: 1,
         workers: args.get_usize("workers").map_err(|e| anyhow!(e))?,
+        micro_batches: args
+            .get_usize("micro-batches")
+            .map_err(|e| anyhow!(e))?,
         seed: args.get_usize("seed").map_err(|e| anyhow!(e))? as u64,
         partition: Algorithm::parse(args.get("partition").unwrap())
             .ok_or_else(|| anyhow!("bad --partition"))?,

@@ -109,21 +109,45 @@ impl Curve {
 
 /// Wall-clock timer bucket: per-phase cumulative times + per-iteration
 /// samples (Table 3 reports mean ms/iteration).
+///
+/// Untimed sections are explicit: [`StepTimer::pause`] suppresses
+/// sampling (any in-flight sample is discarded and `start`/`stop` become
+/// no-ops) until [`StepTimer::resume`]. The trainer pauses around the +F
+/// finetuning phase, which the paper's per-iteration numbers exclude.
 #[derive(Clone, Debug, Default)]
 pub struct StepTimer {
     samples_ms: Vec<f64>,
     started: Option<Instant>,
+    paused: bool,
 }
 
 impl StepTimer {
     pub fn start(&mut self) {
-        self.started = Some(Instant::now());
+        if !self.paused {
+            self.started = Some(Instant::now());
+        }
     }
 
     pub fn stop(&mut self) {
         if let Some(t0) = self.started.take() {
             self.samples_ms.push(t0.elapsed().as_secs_f64() * 1e3);
         }
+    }
+
+    /// Enter an untimed section: drop any in-flight sample and ignore
+    /// `start`/`stop` until [`StepTimer::resume`].
+    pub fn pause(&mut self) {
+        self.paused = true;
+        self.started = None;
+    }
+
+    /// Leave the untimed section.
+    pub fn resume(&mut self) {
+        self.paused = false;
+    }
+
+    pub fn is_paused(&self) -> bool {
+        self.paused
     }
 
     pub fn mean_ms(&self) -> f64 {
@@ -206,6 +230,28 @@ mod tests {
         }
         assert_eq!(t.count(), 3);
         assert!(t.mean_ms() >= 0.0);
+    }
+
+    #[test]
+    fn paused_sections_record_nothing() {
+        let mut t = StepTimer::default();
+        t.start();
+        t.stop();
+        assert_eq!(t.count(), 1);
+        // pausing mid-sample drops the in-flight sample
+        t.start();
+        t.pause();
+        assert!(t.is_paused());
+        t.stop();
+        // start/stop inside the paused section are no-ops
+        t.start();
+        t.stop();
+        assert_eq!(t.count(), 1);
+        t.resume();
+        assert!(!t.is_paused());
+        t.start();
+        t.stop();
+        assert_eq!(t.count(), 2);
     }
 
     #[test]

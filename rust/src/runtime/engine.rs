@@ -4,13 +4,18 @@
 //! compiles each HLO-text function on first use, and executes with plain
 //! `Vec<f32>`/`Vec<i32>` host tensors. All outputs come back as host
 //! vectors (loss scalars, gradients, embeddings) — the coordinator is the
-//! state owner, which is what lets it average gradients across simulated
-//! devices and write embeddings into the table.
+//! state owner, which is what lets it average gradients across data-parallel
+//! workers and write embeddings into the table.
+//!
+//! `Engine` is `Sync`: the executable cache is behind an `RwLock` (writes
+//! only on first compile; every steady-state call takes the read lock) and
+//! the call counters behind a `Mutex`, so `GstCore`'s worker threads execute
+//! micro-batches through one shared engine concurrently.
 
 use super::manifest::{Dtype, Manifest};
 use anyhow::{anyhow, bail, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::{Mutex, RwLock};
 
 /// A host-side tensor heading into (or out of) an executable.
 #[derive(Clone, Debug)]
@@ -82,9 +87,9 @@ pub struct Engine {
     pub manifest: Manifest,
     dir: String,
     client: xla::PjRtClient,
-    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    exes: RwLock<HashMap<String, xla::PjRtLoadedExecutable>>,
     /// cumulative executions per function (observability + perf accounting)
-    calls: RefCell<HashMap<String, usize>>,
+    calls: Mutex<HashMap<String, usize>>,
 }
 
 impl Engine {
@@ -97,14 +102,15 @@ impl Engine {
             manifest,
             dir: dir.to_string(),
             client,
-            exes: RefCell::new(HashMap::new()),
-            calls: RefCell::new(HashMap::new()),
+            exes: RwLock::new(HashMap::new()),
+            calls: Mutex::new(HashMap::new()),
         })
     }
 
-    /// Compile (and cache) one function's HLO text.
+    /// Compile (and cache) one function's HLO text. Racing threads may
+    /// both compile; the first insert wins and the duplicate is dropped.
     fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.exes.borrow().contains_key(name) {
+        if self.exes.read().expect("exes lock").contains_key(name) {
             return Ok(());
         }
         let spec = self.manifest.func(name)?;
@@ -116,7 +122,11 @@ impl Engine {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        self.exes.borrow_mut().insert(name.to_string(), exe);
+        self.exes
+            .write()
+            .expect("exes lock")
+            .entry(name.to_string())
+            .or_insert(exe);
         Ok(())
     }
 
@@ -171,8 +181,13 @@ impl Engine {
             };
             literals.push(lit);
         }
-        *self.calls.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
-        let exes = self.exes.borrow();
+        *self
+            .calls
+            .lock()
+            .expect("calls lock")
+            .entry(name.to_string())
+            .or_insert(0) += 1;
+        let exes = self.exes.read().expect("exes lock");
         let exe = exes.get(name).expect("ensured above");
         let result = exe
             .execute::<xla::Literal>(&literals)
@@ -218,11 +233,24 @@ impl Engine {
 
     /// Per-function call counts since construction.
     pub fn call_counts(&self) -> HashMap<String, usize> {
-        self.calls.borrow().clone()
+        self.calls.lock().expect("calls lock").clone()
     }
 
     pub fn dir(&self) -> &str {
         &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The property `GstCore`'s fork-join worker path depends on: one
+    /// engine shared by reference across worker threads.
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
     }
 }
 

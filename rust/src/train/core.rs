@@ -1,0 +1,632 @@
+//! The dataset-agnostic GST core: one implementation of the paper's
+//! Algorithm 1/2 inner loop shared by every task (DESIGN.md §4).
+//!
+//! [`GstTask`] is the thin, dataset-specific surface — segment provider,
+//! per-slot batch fill, historical-table row mapping, loss-specific
+//! buffers, eval hook — while [`GstCore`] owns everything the methods have
+//! in common: epoch shuffling, segment sampling, the SED draw, historical
+//! table reads / fresh recomputation / write-back, micro-batch gradient
+//! averaging, step timing, eval cadence and the +F finetuning phase.
+//!
+//! # Execution model
+//!
+//! Each optimization step processes `cfg.micro_batches` micro-batches
+//! (simulated data-parallel devices, gradients averaged before one Adam
+//! apply) in three phases:
+//!
+//! 1. **plan** (sequential) — per micro-batch: derive a private RNG stream
+//!    keyed by the global step index, let the task describe the batch
+//!    slots, sample segments, draw SED weights, and resolve stale reads
+//!    against a *snapshot* of the table (the state at group start);
+//! 2. **compute** (parallel) — the micro-batches are sharded contiguously
+//!    over `cfg.workers` threads via [`fork_join_with`]; each worker owns
+//!    a reusable [`BatchBufs`] (staging `embed_fwd` batches and the grad
+//!    batch in turn) and drives the shared [`Engine`] (which is `Sync`);
+//! 3. **commit** (sequential, in micro-batch order) — table write-backs
+//!    (Alg. 2 line 7), gradient averaging, one optimizer apply.
+//!
+//! Because plans depend only on the step index and the group-start table
+//! snapshot, and commits replay in micro-batch order, **the trained
+//! parameters are identical for any `cfg.workers` value** — threads are an
+//! execution knob, `micro_batches` is the semantic one. The conformance
+//! suite pins this (workers=1 vs workers=4, same parameters).
+
+use super::ops::{self, BatchBufs};
+use super::{Method, RunResult, SedMode, TrainConfig};
+use crate::metrics::{Curve, StepTimer};
+use crate::runtime::{Engine, ParamStore};
+use crate::sed;
+use crate::table::EmbeddingTable;
+use crate::util::rng::Pcg64;
+use crate::util::threads;
+use anyhow::{bail, Result};
+
+/// One micro-batch slot, described by the task during the plan phase.
+#[derive(Clone, Debug)]
+pub struct SlotSpec {
+    /// Historical-table row backing this slot (graph, or (graph, config)).
+    pub row: usize,
+    /// Number of segments J of the slot's parent graph.
+    pub num_segments: usize,
+    /// Pooling normalization fed to `grad_step`: 1/J (mean pool, MalNet)
+    /// or 1.0 (sum pool, TpuGraphs §5.3).
+    pub invj: f32,
+}
+
+/// Mutable views of the core-owned training state, handed to task hooks
+/// that run outside the shared inner loop (FullGraph baseline epochs and
+/// the +F finetuning phase).
+pub struct CoreEnv<'e> {
+    pub eng: &'e Engine,
+    pub cfg: &'e TrainConfig,
+    pub ps: &'e mut ParamStore,
+    pub table: &'e mut EmbeddingTable,
+    pub rng: &'e mut Pcg64,
+    pub timer: &'e mut StepTimer,
+    pub step: &'e mut u32,
+}
+
+/// Effective learning rate: config override or the manifest default —
+/// the single definition shared by the inner loop, the FullGraph
+/// baseline and the finetune phase.
+pub fn effective_lr(cfg: &TrainConfig, eng: &Engine) -> f32 {
+    cfg.lr.unwrap_or(eng.manifest.lr)
+}
+
+impl CoreEnv<'_> {
+    /// Effective learning rate (config override or manifest default).
+    pub fn lr(&self) -> f32 {
+        effective_lr(self.cfg, self.eng)
+    }
+}
+
+/// Dataset-specific surface of the GST trainer. Implementations are thin
+/// (~100 lines): everything method-shaped lives in [`GstCore`].
+///
+/// `Sync` is required because `fill_slot`/`fill_loss` run concurrently on
+/// worker threads during the compute phase (read-only).
+pub trait GstTask: Sync {
+    /// Per-micro-batch state threaded from [`GstTask::begin_step`] into
+    /// the fill callbacks (slot → graph/config resolution, cached
+    /// features). Shared read-only across worker threads.
+    type StepCtx: Send + Sync;
+
+    /// Manifest `dataset` this task drives (sanity-checked at startup).
+    fn dataset(&self) -> &'static str;
+
+    /// RNG stream tag keeping task families decorrelated across datasets.
+    fn seed_tag(&self) -> u64;
+
+    /// AOT functions to pre-compile for `method`, so step timings
+    /// (Table 3) exclude compilation.
+    fn warmup_fns(&self, method: Method) -> Vec<&'static str>;
+
+    /// Historical-table layout: segments per row, in row order.
+    fn table_rows(&self) -> Vec<usize>;
+
+    /// Training items (dataset indices), shuffled once per epoch.
+    fn train_items(&self) -> &[usize];
+
+    /// Chunk one shuffled item order into micro-batch units (MalNet:
+    /// chunks of B graphs, drop-last; TpuGraphs: one graph per unit).
+    fn plan_epoch(&self, order: &[usize]) -> Vec<Vec<usize>>;
+
+    /// Describe one micro-batch: build the per-step context and exactly
+    /// `manifest.batch` slot specs. Runs sequentially in the plan phase;
+    /// any task-side randomness (e.g. config sampling) draws from `rng`,
+    /// the step's private stream.
+    fn begin_step(
+        &mut self,
+        unit: &[usize],
+        rng: &mut Pcg64,
+    ) -> (Self::StepCtx, Vec<SlotSpec>);
+
+    /// Write the loss-specific buffers (`labels` for classification, the
+    /// `pair` ordering mask for ranking; `pair` arrives zeroed).
+    fn fill_loss(&self, ctx: &Self::StepCtx, bufs: &mut BatchBufs);
+
+    /// Fill the padded (nodes, adj, mask) views with `slot`'s segment
+    /// `seg`. Used for both the grad batch (sampled segments) and
+    /// `embed_fwd` batches (stale-segment recomputation).
+    fn fill_slot(
+        &self,
+        ctx: &Self::StepCtx,
+        slot: usize,
+        seg: usize,
+        nodes: &mut [f32],
+        adj: &mut [f32],
+        mask: &mut [f32],
+    );
+
+    /// Scalar eval metric over dataset indices (accuracy / OPA).
+    fn eval_metric(
+        &self,
+        eng: &Engine,
+        ps: &ParamStore,
+        items: &[usize],
+    ) -> Result<f64>;
+
+    /// Capped training subset used for the train-side curve points.
+    fn eval_train_subset(&self) -> Vec<usize>;
+
+    /// Test-set indices.
+    fn test_items(&self) -> &[usize];
+
+    /// Total segments across the dataset (observability).
+    fn total_segments(&self) -> usize;
+
+    /// Full Graph Training baseline epoch. Default: unsupported (tasks
+    /// whose constructor rejects `Method::FullGraph` never reach this).
+    fn full_graph_epoch(&mut self, _env: &mut CoreEnv<'_>) -> Result<()> {
+        bail!(
+            "Full Graph Training is not supported on {}",
+            self.dataset()
+        )
+    }
+
+    /// Prediction Head Finetuning (+F, Alg. 2 lines 11-18). Default:
+    /// nothing to finetune (TpuGraphs: F' is a parameter-free sum).
+    fn finetune(
+        &mut self,
+        _env: &mut CoreEnv<'_>,
+        _curve: &mut Curve,
+        _eval_train: &[usize],
+    ) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Batch-padding rule shared by every `embed_fwd` batching site: a short
+/// final chunk fills its trailing slots by repeating the chunk's **last**
+/// entry (the repeats' embeddings are discarded, so any in-range segment
+/// works; the last one keeps the rule branch-free).
+pub fn padded_index(slot: usize, chunk_len: usize) -> usize {
+    slot.min(chunk_len - 1)
+}
+
+/// SED weights for one slot under `mode` (Eq. 1 and its limiting cases).
+fn sed_weights(
+    mode: SedMode,
+    j: usize,
+    s: usize,
+    rng: &mut Pcg64,
+) -> sed::SedWeights {
+    match mode {
+        SedMode::KeepAll => sed::keep_all(j, &[s]),
+        SedMode::DropAll => sed::drop_all(j, &[s]),
+        SedMode::Draw(p) => sed::draw(j, &[s], p, rng),
+    }
+}
+
+/// Fully-resolved plan for one micro-batch (plan phase output). Immutable
+/// and `Sync` during the compute phase.
+struct StepPlan<C> {
+    ctx: C,
+    slots: Vec<SlotSpec>,
+    /// sampled segment per slot
+    sampled: Vec<usize>,
+    /// SED fresh-segment weight per slot
+    eta_fresh: Vec<f32>,
+    /// [B, table_dim] stale aggregate, table hits pre-accumulated
+    stale: Vec<f32>,
+    /// stale segments to recompute fresh: (slot, seg, eta)
+    fresh: Vec<(usize, usize, f32)>,
+    /// global step index — the table write-back version
+    step_id: u32,
+}
+
+/// Compute-phase output for one micro-batch.
+struct StepResult {
+    grads: Vec<Vec<f32>>,
+    /// fresh sampled-segment embeddings [B, table_dim]
+    h_s: Vec<f32>,
+    /// one embedding per `plan.fresh` entry, in order
+    fresh_embs: Vec<Vec<f32>>,
+}
+
+/// The shared GST driver. Owns all cross-step state (parameters, Adam
+/// moments, the historical table, RNG, timers); the task contributes only
+/// dataset-specific mapping and filling.
+pub struct GstCore<'a, T: GstTask> {
+    pub task: T,
+    eng: &'a Engine,
+    pub cfg: TrainConfig,
+    pub ps: ParamStore,
+    pub table: EmbeddingTable,
+    rng: Pcg64,
+    step: u32,
+    /// optimization steps recorded during epoch 0 (cold-table warmup)
+    first_epoch_steps: usize,
+    pub timer: StepTimer,
+    /// one reusable buffer set per worker (embed staging + grad batch)
+    bufs: Vec<BatchBufs>,
+}
+
+impl<'a, T: GstTask> GstCore<'a, T> {
+    /// Wire a task to the shared driver: allocate the table from the
+    /// task's row layout, load parameters, pre-compile the method's AOT
+    /// functions, and size the per-worker buffer pool.
+    pub fn with_task(
+        eng: &'a Engine,
+        task: T,
+        cfg: TrainConfig,
+    ) -> Result<GstCore<'a, T>> {
+        assert_eq!(eng.manifest.dataset, task.dataset());
+        assert_eq!(
+            cfg.s_per_graph, 1,
+            "the AOT grad_step samples S=1 segment per graph slot \
+             (paper's setting)"
+        );
+        let table =
+            EmbeddingTable::new(&task.table_rows(), eng.manifest.table_dim);
+        let ps = ParamStore::load(eng.dir(), &eng.manifest)?;
+        eng.warmup(&task.warmup_fns(cfg.method))?;
+        let pool = cfg.workers.max(1).min(cfg.micro_batches.max(1));
+        let bufs = (0..pool).map(|_| BatchBufs::new(&eng.manifest)).collect();
+        let rng = Pcg64::new(cfg.seed, task.seed_tag());
+        Ok(GstCore {
+            task,
+            eng,
+            cfg,
+            ps,
+            table,
+            rng,
+            step: 0,
+            first_epoch_steps: 0,
+            timer: StepTimer::default(),
+            bufs,
+        })
+    }
+
+    pub fn engine(&self) -> &'a Engine {
+        self.eng
+    }
+
+    /// Total segments across the dataset (observability).
+    pub fn total_segments(&self) -> usize {
+        self.task.total_segments()
+    }
+
+    /// Global optimization-step counter.
+    pub fn steps_done(&self) -> u32 {
+        self.step
+    }
+
+    /// Split `self` into the task and a [`CoreEnv`] over the remaining
+    /// state (disjoint field borrows).
+    fn split_env(&mut self) -> (&mut T, CoreEnv<'_>) {
+        let GstCore { task, eng, cfg, ps, table, rng, timer, step, .. } =
+            self;
+        (
+            task,
+            CoreEnv { eng: *eng, cfg: &*cfg, ps, table, rng, timer, step },
+        )
+    }
+
+    /// Run the full schedule: `epochs` of training, then (for +F methods)
+    /// the finetuning phase, recording the metric curve.
+    pub fn train(&mut self) -> Result<RunResult> {
+        let mut curve = Curve::default();
+        let eval_train = self.task.eval_train_subset();
+        for epoch in 0..self.cfg.epochs {
+            if self.cfg.method == Method::FullGraph {
+                let (task, mut env) = self.split_env();
+                task.full_graph_epoch(&mut env)?;
+            } else {
+                self.gst_epoch(epoch)?;
+            }
+            if epoch == 0 {
+                self.first_epoch_steps = self.timer.count();
+            }
+            if (epoch + 1) % self.cfg.eval_every == 0
+                || epoch + 1 == self.cfg.epochs
+            {
+                let tr =
+                    self.task.eval_metric(self.eng, &self.ps, &eval_train)?;
+                let te = self.task.eval_metric(
+                    self.eng,
+                    &self.ps,
+                    self.task.test_items(),
+                )?;
+                curve.push(epoch + 1, tr, te);
+            }
+        }
+        if self.cfg.method.finetunes() {
+            // finetune steps are not part of the Table 3 per-iteration
+            // time (the paper reports the main-loop fwd+bwd time)
+            self.timer.pause();
+            let (task, mut env) = self.split_env();
+            task.finetune(&mut env, &mut curve, &eval_train)?;
+            self.timer.resume();
+        }
+        let train_metric =
+            self.task.eval_metric(self.eng, &self.ps, &eval_train)?;
+        let test_metric = self.task.eval_metric(
+            self.eng,
+            &self.ps,
+            self.task.test_items(),
+        )?;
+        Ok(RunResult {
+            train_metric,
+            test_metric,
+            // steady-state: exclude epoch 0's cold-table steps
+            step_ms: self.timer.mean_ms_from(self.first_epoch_steps),
+            curve,
+            call_counts: self.eng.call_counts(),
+        })
+    }
+
+    // -- the shared GST inner loop (Alg. 1/2) -------------------------------
+
+    fn gst_epoch(&mut self, epoch: usize) -> Result<()> {
+        let mut order = self.task.train_items().to_vec();
+        self.rng.stream(&format!("epoch{epoch}")).shuffle(&mut order);
+        let units = self.task.plan_epoch(&order);
+        let group = self.cfg.micro_batches.max(1);
+        for chunk in units.chunks(group) {
+            self.run_group(chunk)?;
+        }
+        Ok(())
+    }
+
+    /// One optimization step: plan → parallel compute → ordered commit.
+    fn run_group(&mut self, units: &[Vec<usize>]) -> Result<()> {
+        let eng = self.eng;
+        let m = &eng.manifest;
+        let (b, td) = (m.batch, m.table_dim);
+        let method = self.cfg.method;
+        let mode = method.sed(self.cfg.keep_p);
+        self.timer.start();
+
+        // 1. plan (sequential; table reads see the group-start snapshot)
+        let mut plans: Vec<StepPlan<T::StepCtx>> =
+            Vec::with_capacity(units.len());
+        for (k, unit) in units.iter().enumerate() {
+            let step_id = self.step + k as u32;
+            let mut rng = self.rng.stream(&format!("step{step_id}"));
+            let (ctx, slots) = self.task.begin_step(unit, &mut rng);
+            assert_eq!(slots.len(), b, "task must describe all B slots");
+            let mut plan = StepPlan {
+                ctx,
+                slots,
+                sampled: vec![0usize; b],
+                eta_fresh: vec![0.0f32; b],
+                stale: vec![0.0f32; b * td],
+                fresh: Vec::new(),
+                step_id,
+            };
+            for slot in 0..b {
+                let j = plan.slots[slot].num_segments;
+                let s = rng.below(j);
+                plan.sampled[slot] = s;
+                let w = sed_weights(mode, j, s, &mut rng);
+                plan.eta_fresh[slot] = w.eta_fresh;
+                let row = plan.slots[slot].row;
+                for (seg, &eta) in w.eta_stale.iter().enumerate() {
+                    if seg == s || eta == 0.0 {
+                        continue;
+                    }
+                    if !method.fresh_stale() {
+                        if let Some(h) = self.table.get(row, seg) {
+                            for d in 0..td {
+                                plan.stale[slot * td + d] += eta * h[d];
+                            }
+                            continue;
+                        }
+                        // else: cold entry (first epoch) — recompute
+                        // fresh AND write back, Alg. 2's first touch
+                    }
+                    plan.fresh.push((slot, seg, eta));
+                }
+            }
+            plans.push(plan);
+        }
+
+        // 2. compute (parallel): contiguous shards keep plan order
+        let nworkers = self.bufs.len().min(plans.len()).max(1);
+        let ranges = threads::chunk_ranges(plans.len(), nworkers);
+        let task = &self.task;
+        let ps = &self.ps;
+        let plans_ref = &plans;
+        let ranges_ref = &ranges;
+        let worker_out =
+            threads::fork_join_with(&mut self.bufs[..nworkers], |w, wb| {
+                ranges_ref[w]
+                    .clone()
+                    .map(|pi| compute_step(eng, task, ps, &plans_ref[pi], wb))
+                    .collect::<Result<Vec<StepResult>>>()
+            });
+        let mut results: Vec<StepResult> = Vec::with_capacity(plans.len());
+        for r in worker_out {
+            results.extend(r?);
+        }
+
+        // 3. commit (sequential, micro-batch order — deterministic for
+        // any worker count)
+        for (plan, res) in plans.iter().zip(&results) {
+            commit_step(&mut self.table, method.uses_table(), plan, res, td);
+        }
+        let sets: Vec<Vec<Vec<f32>>> =
+            results.into_iter().map(|r| r.grads).collect();
+        let avg = ops::average_grads(&sets);
+        let lr = effective_lr(&self.cfg, eng);
+        ops::apply(eng, &mut self.ps, &avg, lr)?;
+        self.step += plans.len() as u32;
+        self.timer.stop();
+        Ok(())
+    }
+}
+
+/// Execute one planned micro-batch on a worker's buffers: recompute the
+/// planned fresh stale segments through batched `embed_fwd` (staged in
+/// the same (nodes, adj, mask) tensors the grad batch overwrites after),
+/// then assemble the grad batch and run `grad_step`. Read-only on
+/// everything shared.
+fn compute_step<T: GstTask>(
+    eng: &Engine,
+    task: &T,
+    ps: &ParamStore,
+    plan: &StepPlan<T::StepCtx>,
+    bufs: &mut BatchBufs,
+) -> Result<StepResult> {
+    let m = &eng.manifest;
+    let (b, td) = (m.batch, m.table_dim);
+    // stale aggregate starts from the table-served part of the plan
+    bufs.stale.copy_from_slice(&plan.stale);
+    // fresh stale embeddings, batched through embed_fwd
+    let mut fresh_embs: Vec<Vec<f32>> = Vec::with_capacity(plan.fresh.len());
+    for chunk in plan.fresh.chunks(b) {
+        for bslot in 0..b {
+            let (slot, seg, _) = chunk[padded_index(bslot, chunk.len())];
+            let (nodes, adj, mask) = bufs.slot(m, bslot);
+            task.fill_slot(&plan.ctx, slot, seg, nodes, adj, mask);
+        }
+        let h = ops::embed_fwd(eng, ps, &bufs.nodes, &bufs.adj, &bufs.mask)?;
+        for (i, &(slot, _seg, eta)) in chunk.iter().enumerate() {
+            let hv = &h[i * td..(i + 1) * td];
+            for d in 0..td {
+                bufs.stale[slot * td + d] += eta * hv[d];
+            }
+            fresh_embs.push(hv.to_vec());
+        }
+    }
+    // grad batch: sampled segments + SED weights + loss buffers
+    for slot in 0..b {
+        bufs.eta[slot] = plan.eta_fresh[slot];
+        bufs.invj[slot] = plan.slots[slot].invj;
+        let (nodes, adj, mask) = bufs.slot(m, slot);
+        task.fill_slot(&plan.ctx, slot, plan.sampled[slot], nodes, adj, mask);
+    }
+    // reused buffers: tasks only set the pair mask's 1-entries
+    bufs.pair.fill(0.0);
+    task.fill_loss(&plan.ctx, bufs);
+    let out = ops::grad_step(eng, ps, bufs)?;
+    Ok(StepResult { grads: out.grads, h_s: out.h_s, fresh_embs })
+}
+
+/// Table write-back for one micro-batch (Alg. 2 line 7): fresh stale
+/// recomputations first, then the sampled segments' embeddings, all
+/// versioned with the micro-batch's global step index.
+fn commit_step<C>(
+    table: &mut EmbeddingTable,
+    uses_table: bool,
+    plan: &StepPlan<C>,
+    res: &StepResult,
+    td: usize,
+) {
+    if !uses_table {
+        return;
+    }
+    for (&(slot, seg, _eta), h) in plan.fresh.iter().zip(&res.fresh_embs) {
+        table.put(plan.slots[slot].row, seg, h, plan.step_id);
+    }
+    for (slot, spec) in plan.slots.iter().enumerate() {
+        let h = &res.h_s[slot * td..(slot + 1) * td];
+        table.put(spec.row, plan.sampled[slot], h, plan.step_id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_index_repeats_last_entry() {
+        // full chunk: identity
+        assert_eq!(
+            (0..4).map(|s| padded_index(s, 4)).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+        // short final chunk of 2 in a 4-slot batch: trailing slots
+        // repeat the LAST entry (index 1), not entry 0
+        assert_eq!(
+            (0..4).map(|s| padded_index(s, 2)).collect::<Vec<_>>(),
+            vec![0, 1, 1, 1]
+        );
+        assert_eq!(padded_index(7, 1), 0);
+    }
+
+    #[test]
+    fn sed_weights_honor_every_mode() {
+        let mut rng = Pcg64::new(3, 9);
+        let (j, s) = (6usize, 2usize);
+        let keep = sed_weights(SedMode::KeepAll, j, s, &mut rng);
+        assert_eq!(keep.eta_fresh, 1.0);
+        assert_eq!(keep.eta_stale[s], 0.0);
+        assert!(keep
+            .eta_stale
+            .iter()
+            .enumerate()
+            .all(|(i, &e)| i == s || e == 1.0));
+        let drop = sed_weights(SedMode::DropAll, j, s, &mut rng);
+        assert_eq!(drop.eta_fresh, j as f32);
+        assert!(drop.eta_stale.iter().all(|&e| e == 0.0));
+        for p in [0.0f32, 0.3, 1.0] {
+            let w = sed_weights(SedMode::Draw(p), j, s, &mut rng);
+            assert!((w.eta_fresh - (p + (1.0 - p) * j as f32)).abs() < 1e-6);
+            assert_eq!(w.eta_stale[s], 0.0);
+            assert!(w.eta_stale.iter().all(|&e| e == 0.0 || e == 1.0));
+        }
+    }
+
+    fn plan_and_result() -> (StepPlan<()>, StepResult) {
+        let slots = vec![
+            SlotSpec { row: 0, num_segments: 3, invj: 1.0 / 3.0 },
+            SlotSpec { row: 1, num_segments: 2, invj: 0.5 },
+        ];
+        let plan = StepPlan {
+            ctx: (),
+            slots,
+            sampled: vec![2, 0],
+            eta_fresh: vec![1.0, 1.0],
+            stale: vec![0.0; 2 * 2],
+            fresh: vec![(0, 1, 1.0)],
+            step_id: 7,
+        };
+        let res = StepResult {
+            grads: vec![],
+            h_s: vec![1.0, 2.0, 3.0, 4.0],
+            fresh_embs: vec![vec![9.0, 9.5]],
+        };
+        (plan, res)
+    }
+
+    #[test]
+    fn commit_advances_versions_and_values() {
+        let mut table = EmbeddingTable::new(&[3, 2], 2);
+        let (plan, res) = plan_and_result();
+        commit_step(&mut table, true, &plan, &res, 2);
+        // fresh stale write-back for slot 0, seg 1
+        assert_eq!(table.get(0, 1).unwrap(), &[9.0, 9.5]);
+        // sampled-segment write-backs
+        assert_eq!(table.get(0, 2).unwrap(), &[1.0, 2.0]);
+        assert_eq!(table.get(1, 0).unwrap(), &[3.0, 4.0]);
+        // versions advance to the micro-batch's step id
+        assert_eq!(table.staleness(0, 2, 7), Some(0));
+        assert_eq!(table.staleness(0, 1, 9), Some(2));
+        // untouched entries stay unwritten
+        assert!(table.get(0, 0).is_none());
+        assert!(table.get(1, 1).is_none());
+    }
+
+    #[test]
+    fn commit_is_a_noop_without_table() {
+        let mut table = EmbeddingTable::new(&[3, 2], 2);
+        let (plan, res) = plan_and_result();
+        commit_step(&mut table, false, &plan, &res, 2);
+        assert_eq!(table.coverage(), 0.0);
+    }
+
+    #[test]
+    fn later_commit_wins_conflicts_deterministically() {
+        let mut table = EmbeddingTable::new(&[3, 2], 2);
+        let (plan, res) = plan_and_result();
+        commit_step(&mut table, true, &plan, &res, 2);
+        let (mut plan2, mut res2) = plan_and_result();
+        plan2.step_id = 8;
+        res2.h_s = vec![5.0, 6.0, 7.0, 8.0];
+        commit_step(&mut table, true, &plan2, &res2, 2);
+        assert_eq!(table.get(0, 2).unwrap(), &[5.0, 6.0]);
+        assert_eq!(table.staleness(0, 2, 8), Some(0));
+    }
+}

@@ -1,32 +1,30 @@
-//! MalNet trainer: 5-way graph classification (Tables 1, 3; Figs 2, 3, 4, 6).
+//! MalNet task: 5-way graph classification (Tables 1, 3; Figs 2, 3, 4, 6).
+//!
+//! Everything method-shaped (sampling, SED, the historical table,
+//! micro-batch averaging, timing, eval cadence) lives in
+//! [`GstCore`](super::core::GstCore); this module contributes only the
+//! dataset mapping — table row = graph, mean pooling (1/J), class labels —
+//! plus the two MalNet-only phases: the Full Graph Training baseline and
+//! +F prediction-head finetuning.
 
+use super::core::{CoreEnv, GstCore, GstTask, SlotSpec};
 use super::ops::{self, BatchBufs};
-use super::{Method, RunResult, SedMode, TrainConfig};
+use super::{Method, TrainConfig};
 use crate::datasets::MalnetDataset;
-use crate::metrics::{self, Curve, StepTimer};
+use crate::metrics::{self, Curve};
 use crate::partition::Algorithm;
 use crate::runtime::{Engine, ParamStore};
-use crate::sed;
-use crate::segment::SegmentedGraph;
-use crate::table::EmbeddingTable;
+use crate::segment::{AdjNorm, SegmentedGraph};
 use crate::util::rng::Pcg64;
 use anyhow::{bail, Result};
 
-pub struct MalnetTrainer<'a> {
-    eng: &'a Engine,
-    data: &'a MalnetDataset,
-    pub cfg: TrainConfig,
-    pub ps: ParamStore,
-    segs: Vec<SegmentedGraph>,
-    pub table: EmbeddingTable,
-    rng: Pcg64,
-    step: u32,
-    /// steps recorded during the first epoch (cold-table warmup)
-    first_epoch_steps: usize,
-    pub timer: StepTimer,
-}
+/// The MalNet trainer is the shared core driving a [`MalnetTask`]; the
+/// public surface (`new` / `train` / `evaluate` / `total_segments` and the
+/// `ps` / `table` / `timer` / `cfg` fields) is unchanged from the
+/// pre-refactor trainer.
+pub type MalnetTrainer<'a> = GstCore<'a, MalnetTask<'a>>;
 
-impl<'a> MalnetTrainer<'a> {
+impl<'a> GstCore<'a, MalnetTask<'a>> {
     /// Partition every graph and set up state. Errors with "OOM" if the
     /// method is FullGraph and any training graph exceeds the memory
     /// budget (more segments than the full-step artifact has slots — the
@@ -36,13 +34,36 @@ impl<'a> MalnetTrainer<'a> {
         data: &'a MalnetDataset,
         cfg: TrainConfig,
     ) -> Result<MalnetTrainer<'a>> {
-        assert_eq!(eng.manifest.dataset, "malnet");
-        assert_eq!(
-            cfg.s_per_graph, 1,
-            "the AOT grad_step samples S=1 segment per graph slot (paper's setting)"
-        );
+        let task = MalnetTask::new(eng, data, &cfg)?;
+        GstCore::with_task(eng, task, cfg)
+    }
+
+    /// Test-time evaluation: fresh embeddings for every segment, mean
+    /// pool, head (P_test in §3.3). Returns (accuracy, mean CE loss).
+    pub fn evaluate(&self, graphs: &[usize]) -> Result<(f64, f64)> {
+        self.task.eval(self.engine(), &self.ps, graphs)
+    }
+}
+
+pub struct MalnetTask<'a> {
+    data: &'a MalnetDataset,
+    segs: Vec<SegmentedGraph>,
+    batch: usize,
+    max_nodes: usize,
+    feat: usize,
+    adj_norm: AdjNorm,
+}
+
+impl<'a> MalnetTask<'a> {
+    fn new(
+        eng: &Engine,
+        data: &'a MalnetDataset,
+        cfg: &TrainConfig,
+    ) -> Result<MalnetTask<'a>> {
+        let m = &eng.manifest;
+        assert_eq!(m.dataset, "malnet");
         let mut rng = Pcg64::new(cfg.seed, 0x7261).stream("partition");
-        let max = eng.manifest.max_nodes;
+        let max = m.max_nodes;
         let mut segs: Vec<SegmentedGraph> = data
             .graphs
             .iter()
@@ -56,11 +77,11 @@ impl<'a> MalnetTrainer<'a> {
             // partition's only job is memory packing. When the configured
             // partitioner leaves slack (slivers), retry with BFS — which
             // fills segments to exactly max_nodes — before declaring OOM.
-            let jmax = eng.manifest.full_jmax;
+            let jmax = m.full_jmax;
             for (i, g) in data.graphs.iter().enumerate() {
                 if segs[i].num_segments() > jmax {
-                    let packed = Algorithm::EdgeCutBfs
-                        .partition(g, max, &mut rng);
+                    let packed =
+                        Algorithm::EdgeCutBfs.partition(g, max, &mut rng);
                     segs[i] = SegmentedGraph::new(g, &packed);
                 }
                 if segs[i].num_segments() > jmax {
@@ -73,250 +94,26 @@ impl<'a> MalnetTrainer<'a> {
                 }
             }
         }
-        let counts: Vec<usize> =
-            segs.iter().map(|s| s.num_segments()).collect();
-        let table = EmbeddingTable::new(&counts, eng.manifest.table_dim);
-        let ps = ParamStore::load(eng.dir(), &eng.manifest)?;
-        // compile up front so step timings (Table 3) exclude compilation
-        let mut fns = vec!["grad_step", "apply_step", "embed_fwd", "predict"];
-        if cfg.method == Method::FullGraph {
-            fns.push("full_step");
-        }
-        if cfg.method.finetunes() {
-            fns.extend(["head_grad_step", "head_apply_step"]);
-        }
-        eng.warmup(&fns)?;
-        Ok(MalnetTrainer {
-            eng,
+        Ok(MalnetTask {
             data,
-            cfg: cfg.clone(),
-            ps,
             segs,
-            table,
-            rng: Pcg64::new(cfg.seed, 0x7261),
-            step: 0,
-            first_epoch_steps: 0,
-            timer: StepTimer::default(),
+            batch: m.batch,
+            max_nodes: m.max_nodes,
+            feat: m.feat,
+            adj_norm: m.adj_norm,
         })
     }
-
-    fn lr(&self) -> f32 {
-        self.cfg.lr.unwrap_or(self.eng.manifest.lr)
-    }
-
-    /// Total segments across the dataset (observability).
-    pub fn total_segments(&self) -> usize {
-        self.segs.iter().map(|s| s.num_segments()).sum()
-    }
-
-    /// Run the full schedule: `epochs` of GST training, then (for +F
-    /// methods) the finetuning phase, recording the accuracy curve.
-    pub fn train(&mut self) -> Result<RunResult> {
-        let mut curve = Curve::default();
-        let eval_train = self.eval_subset(&self.data.train, 40);
-        for epoch in 0..self.cfg.epochs {
-            if self.cfg.method == Method::FullGraph {
-                self.full_graph_epoch()?;
-            } else {
-                self.gst_epoch()?;
-            }
-            if epoch == 0 {
-                self.first_epoch_steps = self.timer.count();
-            }
-            if (epoch + 1) % self.cfg.eval_every == 0
-                || epoch + 1 == self.cfg.epochs
-            {
-                let (tr, _) = self.evaluate(&eval_train)?;
-                let (te, _) = self.evaluate(&self.data.test)?;
-                curve.push(epoch + 1, tr, te);
-            }
-        }
-        if self.cfg.method.finetunes() {
-            self.finetune(&mut curve, &eval_train)?;
-        }
-        let (train_metric, _) = self.evaluate(&eval_train)?;
-        let (test_metric, _) = self.evaluate(&self.data.test)?;
-        Ok(RunResult {
-            train_metric,
-            test_metric,
-            // steady-state: exclude the first epoch's cold-table steps
-            step_ms: self.timer.mean_ms_from(self.first_epoch_steps),
-            curve,
-            call_counts: self.eng.call_counts(),
-        })
-    }
-
-    fn eval_subset(&self, idx: &[usize], cap: usize) -> Vec<usize> {
-        idx.iter().take(cap).copied().collect()
-    }
-
-    // -- GST family ---------------------------------------------------------
-
-    fn gst_epoch(&mut self) -> Result<()> {
-        let b = self.eng.manifest.batch;
-        let mut order = self.data.train.clone();
-        let mut rng = self.rng.stream(&format!("epoch{}", self.step));
-        rng.shuffle(&mut order);
-        let mut micro: Vec<Vec<Vec<f32>>> = Vec::new();
-        for chunk in order.chunks(b) {
-            if chunk.len() < b {
-                break; // drop_last, standard minibatch SGD
-            }
-            self.timer.start();
-            let grads = self.gst_step(chunk, &mut rng)?;
-            micro.push(grads);
-            if micro.len() == self.cfg.workers {
-                let avg = ops::average_grads(&micro);
-                let lr = self.lr();
-                ops::apply(self.eng, &mut self.ps, &avg, lr)?;
-                micro.clear();
-            }
-            self.timer.stop();
-            self.step += 1;
-        }
-        Ok(())
-    }
-
-    /// One grad_step over a batch of graphs (each contributing one sampled
-    /// segment) — the heart of Algorithm 1/2.
-    fn gst_step(
-        &mut self,
-        graphs: &[usize],
-        rng: &mut Pcg64,
-    ) -> Result<Vec<Vec<f32>>> {
-        let m = &self.eng.manifest;
-        let (b, td) = (m.batch, m.table_dim);
-        let mut bufs = BatchBufs::new(self.eng);
-        let mut sampled = vec![0usize; b];
-        // needed[slot] = stale segments to aggregate as (seg_idx, eta)
-        let mut needed: Vec<Vec<(usize, f32)>> = vec![Vec::new(); b];
-        // fresh computes required before the step: (slot, graph, seg, eta)
-        let mut fresh: Vec<(usize, usize, usize, f32)> = Vec::new();
-
-        for (slot, &g) in graphs.iter().enumerate() {
-            let j = self.segs[g].num_segments();
-            let s = rng.below(j);
-            sampled[slot] = s;
-            let w = match self.cfg.method.sed(self.cfg.keep_p) {
-                SedMode::KeepAll => sed::keep_all(j, &[s]),
-                SedMode::DropAll => sed::drop_all(j, &[s]),
-                SedMode::Draw(p) => sed::draw(j, &[s], p, rng),
-            };
-            bufs.eta[slot] = w.eta_fresh;
-            bufs.invj[slot] = 1.0 / j as f32;
-            bufs.labels[slot] = self.data.labels[g] as i32;
-            let (nodes, adj, mask) = bufs.slot(self.eng, slot);
-            self.segs[g].fill_padded(
-                &self.data.graphs[g], s, m.adj_norm, m.max_nodes, m.feat,
-                None, nodes, adj, mask,
-            );
-            for (seg, &eta) in w.eta_stale.iter().enumerate() {
-                if seg == s || eta == 0.0 {
-                    continue;
-                }
-                if self.cfg.method.fresh_stale() {
-                    fresh.push((slot, g, seg, eta));
-                } else if self.table.get(g, seg).is_some() {
-                    needed[slot].push((seg, eta));
-                } else {
-                    // cold table entry (first epoch): compute fresh AND
-                    // write it back, exactly like Alg. 2's first touch
-                    fresh.push((slot, g, seg, eta));
-                }
-            }
-        }
-        // batch-compute the fresh stale embeddings
-        if !fresh.is_empty() {
-            let pairs: Vec<(usize, usize)> =
-                fresh.iter().map(|&(_, g, s, _)| (g, s)).collect();
-            let embs = self.embed_many(&pairs)?;
-            for ((slot, g, seg, eta), h) in fresh.iter().zip(&embs) {
-                for d in 0..td {
-                    bufs.stale[slot * td + d] += eta * h[d];
-                }
-                if self.cfg.method.uses_table() {
-                    self.table.put(*g, *seg, h, self.step);
-                }
-            }
-        }
-        // add the table-served stale embeddings
-        for (slot, &g) in graphs.iter().enumerate() {
-            for &(seg, eta) in &needed[slot] {
-                let h = self.table.get(g, seg).expect("checked above");
-                for d in 0..td {
-                    bufs.stale[slot * td + d] += eta * h[d];
-                }
-            }
-        }
-        let out = ops::grad_step(self.eng, &self.ps, &bufs)?;
-        // write back the fresh sampled-segment embeddings (Alg. 2 line 7)
-        if self.cfg.method.uses_table() {
-            for (slot, &g) in graphs.iter().enumerate() {
-                let h = &out.h_s[slot * td..(slot + 1) * td];
-                self.table.put(g, sampled[slot], h, self.step);
-            }
-        }
-        Ok(out.grads)
-    }
-
-    // -- Full Graph Training baseline ----------------------------------------
-
-    fn full_graph_epoch(&mut self) -> Result<()> {
-        let b = self.eng.manifest.batch;
-        let mut order = self.data.train.clone();
-        let mut rng = self.rng.stream(&format!("full{}", self.step));
-        rng.shuffle(&mut order);
-        for chunk in order.chunks(b) {
-            if chunk.len() < b {
-                break;
-            }
-            self.timer.start();
-            let mut sets = Vec::with_capacity(chunk.len());
-            for &g in chunk {
-                sets.push(self.full_step_one(g)?.grads);
-            }
-            let avg = ops::average_grads(&sets);
-            let lr = self.lr();
-            ops::apply(self.eng, &mut self.ps, &avg, lr)?;
-            self.timer.stop();
-            self.step += 1;
-        }
-        Ok(())
-    }
-
-    fn full_step_one(&mut self, g: usize) -> Result<ops::StepOut> {
-        let m = &self.eng.manifest;
-        let (jm, n, f) = (m.full_jmax, m.max_nodes, m.feat);
-        let j = self.segs[g].num_segments();
-        assert!(j <= jm, "checked at construction");
-        let mut nodes = vec![0f32; jm * n * f];
-        let mut adj = vec![0f32; jm * n * n];
-        let mut mask = vec![0f32; jm * n];
-        let mut seg_mask = vec![0f32; jm];
-        for s in 0..j {
-            self.segs[g].fill_padded(
-                &self.data.graphs[g], s, m.adj_norm, n, f, None,
-                &mut nodes[s * n * f..(s + 1) * n * f],
-                &mut adj[s * n * n..(s + 1) * n * n],
-                &mut mask[s * n..(s + 1) * n],
-            );
-            seg_mask[s] = 1.0;
-        }
-        ops::full_step(
-            self.eng, &self.ps, &nodes, &adj, &mask, &seg_mask,
-            self.data.labels[g] as i32,
-        )
-    }
-
-    // -- shared helpers -------------------------------------------------------
 
     /// Fresh embeddings for a list of (graph, segment) pairs, batched
-    /// through `embed_fwd` (pads the last chunk by repeating entry 0).
+    /// through `embed_fwd` (a short final chunk is padded by repeating
+    /// its last entry — see [`super::core::padded_index`]).
     pub fn embed_many(
         &self,
+        eng: &Engine,
+        ps: &ParamStore,
         pairs: &[(usize, usize)],
     ) -> Result<Vec<Vec<f32>>> {
-        let m = &self.eng.manifest;
+        let m = &eng.manifest;
         let (b, n, f, td) = (m.batch, m.max_nodes, m.feat, m.table_dim);
         let mut out = Vec::with_capacity(pairs.len());
         let mut nodes = vec![0f32; b * n * f];
@@ -324,15 +121,16 @@ impl<'a> MalnetTrainer<'a> {
         let mut mask = vec![0f32; b * n];
         for chunk in pairs.chunks(b) {
             for slot in 0..b {
-                let (g, s) = chunk[slot.min(chunk.len() - 1)];
+                let (g, s) = chunk[super::core::padded_index(slot, chunk.len())];
                 self.segs[g].fill_padded(
-                    &self.data.graphs[g], s, m.adj_norm, n, f, None,
+                    &self.data.graphs[g], s, m.adj_norm, n, f,
+                    None,
                     &mut nodes[slot * n * f..(slot + 1) * n * f],
                     &mut adj[slot * n * n..(slot + 1) * n * n],
                     &mut mask[slot * n..(slot + 1) * n],
                 );
             }
-            let h = ops::embed_fwd(self.eng, &self.ps, &nodes, &adj, &mask)?;
+            let h = ops::embed_fwd(eng, ps, &nodes, &adj, &mask)?;
             for slot in 0..chunk.len() {
                 out.push(h[slot * td..(slot + 1) * td].to_vec());
             }
@@ -340,10 +138,14 @@ impl<'a> MalnetTrainer<'a> {
         Ok(out)
     }
 
-    /// Test-time evaluation: fresh embeddings for every segment, mean pool,
-    /// head (P_test in §3.3). Returns (accuracy, mean CE loss).
-    pub fn evaluate(&self, graphs: &[usize]) -> Result<(f64, f64)> {
-        let m = &self.eng.manifest;
+    /// (accuracy, mean CE loss) over `graphs` with the current parameters.
+    pub fn eval(
+        &self,
+        eng: &Engine,
+        ps: &ParamStore,
+        graphs: &[usize],
+    ) -> Result<(f64, f64)> {
+        let m = &eng.manifest;
         let (b, h, td) = (m.batch, m.hidden, m.table_dim);
         assert_eq!(h, td);
         // graph embeddings
@@ -352,7 +154,7 @@ impl<'a> MalnetTrainer<'a> {
             let pairs: Vec<(usize, usize)> = (0..self.segs[g].num_segments())
                 .map(|s| (g, s))
                 .collect();
-            let embs = self.embed_many(&pairs)?;
+            let embs = self.embed_many(eng, ps, &pairs)?;
             let mut agg = vec![0f32; td];
             for e in &embs {
                 for d in 0..td {
@@ -372,7 +174,7 @@ impl<'a> MalnetTrainer<'a> {
             for (slot, hg) in chunk.iter().enumerate() {
                 packed[slot * h..(slot + 1) * h].copy_from_slice(hg);
             }
-            let lg = ops::predict(self.eng, &self.ps, &head_idx, &packed)?;
+            let lg = ops::predict(eng, ps, &head_idx, &packed)?;
             let c = m.classes;
             for slot in 0..chunk.len() {
                 logits.push(lg[slot * c..(slot + 1) * c].to_vec());
@@ -386,14 +188,168 @@ impl<'a> MalnetTrainer<'a> {
         ))
     }
 
-    // -- Prediction Head Finetuning (+F, Alg. 2 lines 11-18) ------------------
+    /// Full Graph Training step over ONE graph (all segments live).
+    fn full_step_one(
+        &self,
+        eng: &Engine,
+        ps: &ParamStore,
+        g: usize,
+    ) -> Result<ops::StepOut> {
+        let m = &eng.manifest;
+        let (jm, n, f) = (m.full_jmax, m.max_nodes, m.feat);
+        let j = self.segs[g].num_segments();
+        assert!(j <= jm, "checked at construction");
+        let mut nodes = vec![0f32; jm * n * f];
+        let mut adj = vec![0f32; jm * n * n];
+        let mut mask = vec![0f32; jm * n];
+        let mut seg_mask = vec![0f32; jm];
+        for s in 0..j {
+            self.segs[g].fill_padded(
+                &self.data.graphs[g], s, m.adj_norm, n, f, None,
+                &mut nodes[s * n * f..(s + 1) * n * f],
+                &mut adj[s * n * n..(s + 1) * n * n],
+                &mut mask[s * n..(s + 1) * n],
+            );
+            seg_mask[s] = 1.0;
+        }
+        ops::full_step(
+            eng, ps, &nodes, &adj, &mask, &seg_mask,
+            self.data.labels[g] as i32,
+        )
+    }
+}
+
+impl GstTask for MalnetTask<'_> {
+    type StepCtx = Vec<usize>;
+
+    fn dataset(&self) -> &'static str {
+        "malnet"
+    }
+
+    fn seed_tag(&self) -> u64 {
+        0x7261
+    }
+
+    fn warmup_fns(&self, method: Method) -> Vec<&'static str> {
+        let mut fns = vec!["grad_step", "apply_step", "embed_fwd", "predict"];
+        if method == Method::FullGraph {
+            fns.push("full_step");
+        }
+        if method.finetunes() {
+            fns.extend(["head_grad_step", "head_apply_step"]);
+        }
+        fns
+    }
+
+    fn table_rows(&self) -> Vec<usize> {
+        self.segs.iter().map(|s| s.num_segments()).collect()
+    }
+
+    fn train_items(&self) -> &[usize] {
+        &self.data.train
+    }
+
+    fn plan_epoch(&self, order: &[usize]) -> Vec<Vec<usize>> {
+        order
+            .chunks(self.batch)
+            // drop_last, standard minibatch SGD
+            .filter(|c| c.len() == self.batch)
+            .map(|c| c.to_vec())
+            .collect()
+    }
+
+    fn begin_step(
+        &mut self,
+        unit: &[usize],
+        _rng: &mut Pcg64,
+    ) -> (Vec<usize>, Vec<SlotSpec>) {
+        let slots = unit
+            .iter()
+            .map(|&g| {
+                let j = self.segs[g].num_segments();
+                SlotSpec { row: g, num_segments: j, invj: 1.0 / j as f32 }
+            })
+            .collect();
+        (unit.to_vec(), slots)
+    }
+
+    fn fill_loss(&self, ctx: &Vec<usize>, bufs: &mut BatchBufs) {
+        for (slot, &g) in ctx.iter().enumerate() {
+            bufs.labels[slot] = self.data.labels[g] as i32;
+        }
+    }
+
+    fn fill_slot(
+        &self,
+        ctx: &Vec<usize>,
+        slot: usize,
+        seg: usize,
+        nodes: &mut [f32],
+        adj: &mut [f32],
+        mask: &mut [f32],
+    ) {
+        let g = ctx[slot];
+        self.segs[g].fill_padded(
+            &self.data.graphs[g], seg, self.adj_norm, self.max_nodes,
+            self.feat, None, nodes, adj, mask,
+        );
+    }
+
+    fn eval_metric(
+        &self,
+        eng: &Engine,
+        ps: &ParamStore,
+        items: &[usize],
+    ) -> Result<f64> {
+        self.eval(eng, ps, items).map(|(acc, _ce)| acc)
+    }
+
+    fn eval_train_subset(&self) -> Vec<usize> {
+        self.data.train.iter().take(40).copied().collect()
+    }
+
+    fn test_items(&self) -> &[usize] {
+        &self.data.test
+    }
+
+    fn total_segments(&self) -> usize {
+        self.segs.iter().map(|s| s.num_segments()).sum()
+    }
+
+    // -- Full Graph Training baseline ---------------------------------------
+
+    fn full_graph_epoch(&mut self, env: &mut CoreEnv<'_>) -> Result<()> {
+        let b = env.eng.manifest.batch;
+        let mut order = self.data.train.clone();
+        let mut rng = env.rng.stream(&format!("full{}", *env.step));
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(b) {
+            if chunk.len() < b {
+                break;
+            }
+            env.timer.start();
+            let mut sets = Vec::with_capacity(chunk.len());
+            for &g in chunk {
+                sets.push(self.full_step_one(env.eng, env.ps, g)?.grads);
+            }
+            let avg = ops::average_grads(&sets);
+            let lr = env.lr();
+            ops::apply(env.eng, env.ps, &avg, lr)?;
+            env.timer.stop();
+            *env.step += 1;
+        }
+        Ok(())
+    }
+
+    // -- Prediction Head Finetuning (+F, Alg. 2 lines 11-18) ----------------
 
     fn finetune(
         &mut self,
+        env: &mut CoreEnv<'_>,
         curve: &mut Curve,
         eval_train: &[usize],
     ) -> Result<()> {
-        let m = &self.eng.manifest;
+        let m = &env.eng.manifest;
         let (b, h) = (m.batch, m.hidden);
         // 1. refresh every table row with the current backbone F
         let mut pairs = Vec::new();
@@ -402,33 +358,32 @@ impl<'a> MalnetTrainer<'a> {
                 pairs.push((g, s));
             }
         }
-        let embs = self.embed_many(&pairs)?;
+        let embs = self.embed_many(env.eng, env.ps, &pairs)?;
         for ((g, s), e) in pairs.iter().zip(&embs) {
-            self.table.put(*g, *s, e, self.step);
+            env.table.put(*g, *s, e, *env.step);
         }
         // 2. finetune only F' on up-to-date mean-pooled embeddings, with a
         //    fresh Adam state (the backbone stays frozen)
         let head_idx = m.head_indices();
-        let mut head = self.ps.subset(&head_idx);
+        let mut head = env.ps.subset(&head_idx);
         head.t = 0;
         for x in head.m.iter_mut().chain(head.v.iter_mut()) {
             x.fill(0.0);
         }
-        let mut rng = self.rng.stream("finetune");
-        for ft_epoch in 0..self.cfg.finetune_epochs {
+        let mut rng = env.rng.stream("finetune");
+        for ft_epoch in 0..env.cfg.finetune_epochs {
             let mut order = self.data.train.clone();
             rng.shuffle(&mut order);
             for chunk in order.chunks(b) {
                 if chunk.len() < b {
                     break;
                 }
-                self.timer_start_finetune();
                 let mut hg = vec![0f32; b * h];
                 let mut labels = vec![0i32; b];
                 for (slot, &g) in chunk.iter().enumerate() {
                     let j = self.segs[g].num_segments();
                     for s in 0..j {
-                        let e = self.table.get(g, s).expect("refreshed");
+                        let e = env.table.get(g, s).expect("refreshed");
                         for d in 0..h {
                             hg[slot * h + d] += e[d] / j as f32;
                         }
@@ -436,24 +391,19 @@ impl<'a> MalnetTrainer<'a> {
                     labels[slot] = self.data.labels[g] as i32;
                 }
                 let (_loss, grads) =
-                    ops::head_grad_step(self.eng, &head, &hg, &labels)?;
+                    ops::head_grad_step(env.eng, &head, &hg, &labels)?;
                 ops::apply_named(
-                    self.eng, "head_apply_step", &mut head, &grads,
+                    env.eng, "head_apply_step", &mut head, &grads,
                     m.head_lr,
                 )?;
-                self.step += 1;
+                *env.step += 1;
             }
-            // make the updated head visible to evaluate()
-            self.ps.write_subset(&head_idx, &head);
-            let (tr, _) = self.evaluate(eval_train)?;
-            let (te, _) = self.evaluate(&self.data.test)?;
-            curve.push(self.cfg.epochs + ft_epoch + 1, tr, te);
+            // make the updated head visible to eval()
+            env.ps.write_subset(&head_idx, &head);
+            let (tr, _) = self.eval(env.eng, env.ps, eval_train)?;
+            let (te, _) = self.eval(env.eng, env.ps, &self.data.test)?;
+            curve.push(env.cfg.epochs + ft_epoch + 1, tr, te);
         }
         Ok(())
-    }
-
-    fn timer_start_finetune(&mut self) {
-        // finetune steps are not counted in the Table 3 per-iteration time
-        // (the paper reports the main-loop fwd+bwd time)
     }
 }

@@ -12,14 +12,18 @@
 //! | GST+ED    | historical table 𝒯              | Eq. 1 p  | no          |
 //! | GST+EFD   | historical table 𝒯              | Eq. 1 p  | yes         |
 //!
-//! The trainers own all cross-step state (parameters, Adam moments, the
-//! embedding table) and drive the AOT executables; see DESIGN.md §6 for the
-//! method → mechanism map.
+//! The shared [`GstCore`] driver owns all cross-step state (parameters,
+//! Adam moments, the embedding table) and drives the AOT executables;
+//! [`malnet`] and [`tpu`] are thin [`GstTask`] implementations. See
+//! DESIGN.md §4 for the core architecture and §6 for the method →
+//! mechanism map.
 
+pub mod core;
 pub mod malnet;
 pub mod ops;
 pub mod tpu;
 
+pub use self::core::{GstCore, GstTask, SlotSpec};
 pub use malnet::MalnetTrainer;
 pub use tpu::TpuTrainer;
 
@@ -122,8 +126,16 @@ pub struct TrainConfig {
     pub keep_p: f32,
     /// Segments sampled per graph per step (paper: S = 1).
     pub s_per_graph: usize,
-    /// Simulated data-parallel workers (gradients averaged per step).
+    /// Worker threads computing one step's micro-batches in parallel.
+    /// Pure execution knob: trained parameters are identical for any
+    /// value (the conformance suite pins workers=1 ≡ workers=4).
     pub workers: usize,
+    /// Micro-batches (simulated data-parallel devices) whose gradients
+    /// are averaged into each optimizer step. Semantic knob: raising it
+    /// scales the effective batch, exactly like adding devices to
+    /// synchronous SGD. Each micro-batch reads the historical table
+    /// snapshot from the start of its step (device-local staleness).
+    pub micro_batches: usize,
     pub seed: u64,
     pub partition: Algorithm,
     /// Evaluate every this many epochs (curve resolution).
@@ -141,6 +153,7 @@ impl Default for TrainConfig {
             keep_p: 0.5,
             s_per_graph: 1,
             workers: 1,
+            micro_batches: 1,
             seed: 0,
             partition: Algorithm::MetisLike,
             eval_every: 5,

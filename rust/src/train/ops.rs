@@ -2,10 +2,16 @@
 //! threading, Adam state updates. Shared by both dataset trainers.
 
 use crate::runtime::engine::HostArg;
-use crate::runtime::{Engine, ParamStore};
+use crate::runtime::{Engine, Manifest, ParamStore};
 use anyhow::Result;
 
-/// Reusable input buffers for one `grad_step` batch (B slots).
+/// Reusable input buffers for one `grad_step` batch (B slots). `GstCore`
+/// keeps one per worker and reuses it across every step of a run instead
+/// of reallocating per step — every region is fully overwritten by the
+/// fill path (the `pair` mask is explicitly cleared by the core, since
+/// tasks only write its 1-entries). The (nodes, adj, mask) trio doubles
+/// as the `embed_fwd` staging area: the fresh-embedding phase finishes
+/// before the grad batch is packed, so the two uses never overlap.
 pub struct BatchBufs {
     pub nodes: Vec<f32>,
     pub adj: Vec<f32>,
@@ -20,8 +26,7 @@ pub struct BatchBufs {
 }
 
 impl BatchBufs {
-    pub fn new(eng: &Engine) -> BatchBufs {
-        let m = &eng.manifest;
+    pub fn new(m: &Manifest) -> BatchBufs {
         let (b, n, f) = (m.batch, m.max_nodes, m.feat);
         BatchBufs {
             nodes: vec![0.0; b * n * f],
@@ -38,10 +43,9 @@ impl BatchBufs {
     /// Mutable view of slot `i`'s (nodes, adj, mask) region.
     pub fn slot(
         &mut self,
-        eng: &Engine,
+        m: &Manifest,
         i: usize,
     ) -> (&mut [f32], &mut [f32], &mut [f32]) {
-        let m = &eng.manifest;
         let (n, f) = (m.max_nodes, m.feat);
         (
             &mut self.nodes[i * n * f..(i + 1) * n * f],
@@ -50,7 +54,6 @@ impl BatchBufs {
         )
     }
 }
-
 /// Output of one grad_step call.
 pub struct StepOut {
     pub loss: f32,

@@ -1,51 +1,80 @@
-//! TpuGraphs trainer: per-graph config *ranking* via pairwise hinge loss
+//! TpuGraphs task: per-graph config *ranking* via pairwise hinge loss
 //! and ordered pair accuracy (Table 2, Fig 5).
 //!
 //! Paper §5.3 specifics honored here:
 //! * one 𝒢^(i) = (graph, configuration) — configs are featurized into the
 //!   node features, so the table is keyed by (graph, config, segment);
 //! * the head is inside F and F' is a parameter-free sum, so the +F
-//!   finetuning stage is omitted (GST+EFD = GST+ED here) — and the table
-//!   stores scalars (table_dim = 1);
+//!   finetuning stage is omitted (GST+EFD = GST+ED here — the core's
+//!   default no-op `finetune`) — and the table stores scalars
+//!   (table_dim = 1);
 //! * PairwiseHinge within a batch: we batch B configs *of the same graph*
 //!   (ranking across graphs is meaningless), with the ordering mask built
-//!   from measured runtimes.
+//!   from measured runtimes;
+//! * sum pooling — `invj` stays 1.0 (no 1/J).
+//!
+//! The inner loop itself (sampling, SED, table, averaging, timing) is
+//! [`GstCore`](super::core::GstCore)'s.
 
+use super::core::{GstCore, GstTask, SlotSpec};
 use super::ops::{self, BatchBufs};
-use super::{Method, RunResult, SedMode, TrainConfig};
+use super::{Method, TrainConfig};
 use crate::datasets::TpuDataset;
-use crate::metrics::{self, Curve, StepTimer};
+use crate::metrics;
 use crate::runtime::{Engine, ParamStore};
-use crate::sed;
-use crate::segment::SegmentedGraph;
-use crate::table::EmbeddingTable;
+use crate::segment::{AdjNorm, SegmentedGraph};
 use crate::util::rng::Pcg64;
 use anyhow::{bail, Result};
 
-pub struct TpuTrainer<'a> {
-    eng: &'a Engine,
-    data: &'a TpuDataset,
-    pub cfg: TrainConfig,
-    pub ps: ParamStore,
-    /// one partition per graph, shared by all of its configs
-    segs: Vec<SegmentedGraph>,
-    /// table rows are (graph, config) pairs: row = pair_off[g] + c
-    table: EmbeddingTable,
-    pair_off: Vec<usize>,
-    rng: Pcg64,
-    step: u32,
-    /// steps recorded during the first epoch (cold-table warmup)
-    first_epoch_steps: usize,
-    pub timer: StepTimer,
-}
+/// The TpuGraphs trainer is the shared core driving a [`TpuTask`].
+pub type TpuTrainer<'a> = GstCore<'a, TpuTask<'a>>;
 
-impl<'a> TpuTrainer<'a> {
+impl<'a> GstCore<'a, TpuTask<'a>> {
     pub fn new(
         eng: &'a Engine,
         data: &'a TpuDataset,
         cfg: TrainConfig,
     ) -> Result<TpuTrainer<'a>> {
-        assert_eq!(eng.manifest.dataset, "tpu");
+        let task = TpuTask::new(eng, data, &cfg)?;
+        GstCore::with_task(eng, task, cfg)
+    }
+
+    /// Mean OPA over `graphs`: predicted runtime of each config = Σ_j r_j
+    /// with fresh embeddings (F' = sum, paper §5.3).
+    pub fn evaluate(&self, graphs: &[usize]) -> Result<f64> {
+        self.task.eval(self.engine(), &self.ps, graphs)
+    }
+}
+
+pub struct TpuTask<'a> {
+    data: &'a TpuDataset,
+    /// one partition per graph, shared by all of its configs
+    segs: Vec<SegmentedGraph>,
+    /// table rows are (graph, config) pairs: row = pair_off[g] + c
+    pair_off: Vec<usize>,
+    batch: usize,
+    max_nodes: usize,
+    feat: usize,
+    adj_norm: AdjNorm,
+}
+
+/// Per-step state: the graph being ranked, the B sampled configs and
+/// their materialized feature tensors (built once in the plan phase,
+/// read by every fill — no per-slot cloning).
+pub struct TpuStepCtx {
+    g: usize,
+    configs: Vec<usize>,
+    feats: Vec<Vec<f32>>,
+}
+
+impl<'a> TpuTask<'a> {
+    fn new(
+        eng: &Engine,
+        data: &'a TpuDataset,
+        cfg: &TrainConfig,
+    ) -> Result<TpuTask<'a>> {
+        let m = &eng.manifest;
+        assert_eq!(m.dataset, "tpu");
         if cfg.method == Method::FullGraph {
             bail!(
                 "OOM: Full Graph Training on TpuGraphs exceeds the device \
@@ -53,7 +82,7 @@ impl<'a> TpuTrainer<'a> {
             );
         }
         let mut rng = Pcg64::new(cfg.seed, 0x7965).stream("partition");
-        let max = eng.manifest.max_nodes;
+        let max = m.max_nodes;
         let segs: Vec<SegmentedGraph> = data
             .graphs
             .iter()
@@ -62,183 +91,38 @@ impl<'a> TpuTrainer<'a> {
                 SegmentedGraph::new(&g.csr, &set)
             })
             .collect();
-        // table: one row-block per (graph, config) pair
-        let mut counts = Vec::new();
         let mut pair_off = Vec::with_capacity(data.graphs.len());
-        for (gi, g) in data.graphs.iter().enumerate() {
-            pair_off.push(counts.len());
-            for _ in 0..g.configs.len() {
-                counts.push(segs[gi].num_segments());
-            }
+        let mut rows = 0usize;
+        for g in &data.graphs {
+            pair_off.push(rows);
+            rows += g.configs.len();
         }
-        let table = EmbeddingTable::new(&counts, eng.manifest.table_dim);
-        let ps = ParamStore::load(eng.dir(), &eng.manifest)?;
-        eng.warmup(&["grad_step", "apply_step", "embed_fwd"])?;
-        Ok(TpuTrainer {
-            eng,
+        Ok(TpuTask {
             data,
-            cfg: cfg.clone(),
-            ps,
             segs,
-            table,
             pair_off,
-            rng: Pcg64::new(cfg.seed, 0x7965),
-            step: 0,
-            first_epoch_steps: 0,
-            timer: StepTimer::default(),
+            batch: m.batch,
+            max_nodes: m.max_nodes,
+            feat: m.feat,
+            adj_norm: m.adj_norm,
         })
-    }
-
-    fn lr(&self) -> f32 {
-        self.cfg.lr.unwrap_or(self.eng.manifest.lr)
     }
 
     fn pair_row(&self, g: usize, c: usize) -> usize {
         self.pair_off[g] + c
     }
 
-    /// Train; metric = mean OPA (train subset / test set).
-    pub fn train(&mut self) -> Result<RunResult> {
-        let mut curve = Curve::default();
-        let eval_train: Vec<usize> =
-            self.data.train.iter().take(8).copied().collect();
-        for epoch in 0..self.cfg.epochs {
-            self.epoch()?;
-            if epoch == 0 {
-                self.first_epoch_steps = self.timer.count();
-            }
-            if (epoch + 1) % self.cfg.eval_every == 0
-                || epoch + 1 == self.cfg.epochs
-            {
-                let tr = self.evaluate(&eval_train)?;
-                let te = self.evaluate(&self.data.test)?;
-                curve.push(epoch + 1, tr, te);
-            }
-        }
-        let train_metric = self.evaluate(&eval_train)?;
-        let test_metric = self.evaluate(&self.data.test)?;
-        Ok(RunResult {
-            train_metric,
-            test_metric,
-            // steady-state: exclude the first epoch's cold-table steps
-            step_ms: self.timer.mean_ms_from(self.first_epoch_steps),
-            curve,
-            call_counts: self.eng.call_counts(),
-        })
-    }
-
-    /// One epoch = one ranking step per training graph.
-    fn epoch(&mut self) -> Result<()> {
-        let mut order = self.data.train.clone();
-        let mut rng = self.rng.stream(&format!("epoch{}", self.step));
-        rng.shuffle(&mut order);
-        let mut micro: Vec<Vec<Vec<f32>>> = Vec::new();
-        for &g in &order.clone() {
-            self.timer.start();
-            let grads = self.rank_step(g, &mut rng)?;
-            micro.push(grads);
-            if micro.len() == self.cfg.workers {
-                let avg = ops::average_grads(&micro);
-                let lr = self.lr();
-                ops::apply(self.eng, &mut self.ps, &avg, lr)?;
-                micro.clear();
-            }
-            self.timer.stop();
-            self.step += 1;
-        }
-        Ok(())
-    }
-
-    /// One grad_step over B configs of graph `g`.
-    fn rank_step(&mut self, g: usize, rng: &mut Pcg64) -> Result<Vec<Vec<f32>>> {
-        let m = &self.eng.manifest;
-        let b = m.batch;
-        let graph = &self.data.graphs[g];
-        let ncfg = graph.configs.len();
-        // B configs, distinct when possible
-        let configs: Vec<usize> = if ncfg >= b {
-            rng.sample_indices(ncfg, b)
-        } else {
-            (0..b).map(|i| i % ncfg).collect()
-        };
-        let j = self.segs[g].num_segments();
-        let mut bufs = BatchBufs::new(self.eng);
-        let mut sampled = vec![0usize; b];
-        let mut fresh: Vec<(usize, usize, f32)> = Vec::new(); // slot, seg, eta
-        let mut feats_cache: Vec<Vec<f32>> =
-            configs.iter().map(|&c| graph.features_for_config(c)).collect();
-        for slot in 0..b {
-            let c = configs[slot];
-            let s = rng.below(j);
-            sampled[slot] = s;
-            let w = match self.cfg.method.sed(self.cfg.keep_p) {
-                SedMode::KeepAll => sed::keep_all(j, &[s]),
-                SedMode::DropAll => sed::drop_all(j, &[s]),
-                SedMode::Draw(p) => sed::draw(j, &[s], p, rng),
-            };
-            bufs.eta[slot] = w.eta_fresh;
-            bufs.invj[slot] = 1.0; // sum pooling: no 1/J (paper §5.3)
-            let (nodes, adj, mask) = bufs.slot(self.eng, slot);
-            self.segs[g].fill_padded(
-                &graph.csr, s, m.adj_norm, m.max_nodes, m.feat,
-                Some(&feats_cache[slot]), nodes, adj, mask,
-            );
-            let row = self.pair_row(g, c);
-            for (seg, &eta) in w.eta_stale.iter().enumerate() {
-                if seg == s || eta == 0.0 {
-                    continue;
-                }
-                if !self.cfg.method.fresh_stale() {
-                    if let Some(h) = self.table.get(row, seg) {
-                        bufs.stale[slot] += eta * h[0];
-                        continue;
-                    }
-                }
-                fresh.push((slot, seg, eta));
-            }
-            // pairwise ordering mask within the batch (same graph)
-            for other in 0..b {
-                if graph.runtimes[c] > graph.runtimes[configs[other]] {
-                    bufs.pair[slot * b + other] = 1.0;
-                }
-            }
-        }
-        if !fresh.is_empty() {
-            let items: Vec<(usize, usize, usize)> = fresh
-                .iter()
-                .map(|&(slot, seg, _)| (g, configs[slot], seg))
-                .collect();
-            let embs = self.embed_many(&items, Some(&mut feats_cache))?;
-            for ((slot, seg, eta), h) in fresh.iter().zip(&embs) {
-                bufs.stale[*slot] += eta * h[0];
-                if self.cfg.method.uses_table() {
-                    self.table.put(
-                        self.pair_row(g, configs[*slot]), *seg, h, self.step,
-                    );
-                }
-            }
-        }
-        let out = ops::grad_step(self.eng, &self.ps, &bufs)?;
-        if self.cfg.method.uses_table() {
-            for slot in 0..b {
-                let h = &out.h_s[slot..slot + 1];
-                self.table.put(
-                    self.pair_row(g, configs[slot]), sampled[slot], h,
-                    self.step,
-                );
-            }
-        }
-        Ok(out.grads)
-    }
-
     /// Fresh per-segment runtime contributions for (graph, config, seg)
-    /// triples. `feats_hint` is an optional cache keyed by slot order.
-    fn embed_many(
+    /// triples — the eval path. Config feature tensors are materialized
+    /// once per (graph, config) and borrowed from the cache for every
+    /// slot that reuses them.
+    fn embed_eval(
         &self,
+        eng: &Engine,
+        ps: &ParamStore,
         items: &[(usize, usize, usize)],
-        _feats_hint: Option<&mut Vec<Vec<f32>>>,
     ) -> Result<Vec<Vec<f32>>> {
-        let m = &self.eng.manifest;
+        let m = &eng.manifest;
         let (b, n, f, td) = (m.batch, m.max_nodes, m.feat, m.table_dim);
         let mut out = Vec::with_capacity(items.len());
         let mut nodes = vec![0f32; b * n * f];
@@ -249,22 +133,20 @@ impl<'a> TpuTrainer<'a> {
             std::collections::HashMap::new();
         for chunk in items.chunks(b) {
             for slot in 0..b {
-                let (g, c, s) = chunk[slot.min(chunk.len() - 1)];
-                let feats = cache
-                    .entry((g, c))
-                    .or_insert_with(|| {
-                        self.data.graphs[g].features_for_config(c)
-                    })
-                    .clone();
+                let (g, c, s) =
+                    chunk[super::core::padded_index(slot, chunk.len())];
+                let feats = cache.entry((g, c)).or_insert_with(|| {
+                    self.data.graphs[g].features_for_config(c)
+                });
                 self.segs[g].fill_padded(
                     &self.data.graphs[g].csr, s, m.adj_norm, n, f,
-                    Some(&feats),
+                    Some(feats.as_slice()),
                     &mut nodes[slot * n * f..(slot + 1) * n * f],
                     &mut adj[slot * n * n..(slot + 1) * n * n],
                     &mut mask[slot * n..(slot + 1) * n],
                 );
             }
-            let h = ops::embed_fwd(self.eng, &self.ps, &nodes, &adj, &mask)?;
+            let h = ops::embed_fwd(eng, ps, &nodes, &adj, &mask)?;
             for slot in 0..chunk.len() {
                 out.push(h[slot * td..(slot + 1) * td].to_vec());
             }
@@ -272,9 +154,13 @@ impl<'a> TpuTrainer<'a> {
         Ok(out)
     }
 
-    /// Mean OPA over `graphs`: predicted runtime of each config = Σ_j r_j
-    /// with fresh embeddings (F' = sum, paper §5.3).
-    pub fn evaluate(&self, graphs: &[usize]) -> Result<f64> {
+    /// Mean OPA over `graphs`.
+    pub fn eval(
+        &self,
+        eng: &Engine,
+        ps: &ParamStore,
+        graphs: &[usize],
+    ) -> Result<f64> {
         let mut per_graph = Vec::with_capacity(graphs.len());
         for &g in graphs {
             let graph = &self.data.graphs[g];
@@ -285,7 +171,7 @@ impl<'a> TpuTrainer<'a> {
                     items.push((g, c, s));
                 }
             }
-            let embs = self.embed_many(&items, None)?;
+            let embs = self.embed_eval(eng, ps, &items)?;
             let mut yhat = vec![0f32; graph.configs.len()];
             for ((_, c, _), h) in items.iter().zip(&embs) {
                 yhat[*c] += h[0];
@@ -293,5 +179,124 @@ impl<'a> TpuTrainer<'a> {
             per_graph.push((yhat, graph.runtimes.clone()));
         }
         Ok(metrics::mean_opa(&per_graph))
+    }
+}
+
+impl GstTask for TpuTask<'_> {
+    type StepCtx = TpuStepCtx;
+
+    fn dataset(&self) -> &'static str {
+        "tpu"
+    }
+
+    fn seed_tag(&self) -> u64 {
+        0x7965
+    }
+
+    fn warmup_fns(&self, _method: Method) -> Vec<&'static str> {
+        vec!["grad_step", "apply_step", "embed_fwd"]
+    }
+
+    fn table_rows(&self) -> Vec<usize> {
+        let mut counts = Vec::new();
+        for (gi, g) in self.data.graphs.iter().enumerate() {
+            for _ in 0..g.configs.len() {
+                counts.push(self.segs[gi].num_segments());
+            }
+        }
+        counts
+    }
+
+    fn train_items(&self) -> &[usize] {
+        &self.data.train
+    }
+
+    /// One ranking micro-batch per training graph.
+    fn plan_epoch(&self, order: &[usize]) -> Vec<Vec<usize>> {
+        order.iter().map(|&g| vec![g]).collect()
+    }
+
+    fn begin_step(
+        &mut self,
+        unit: &[usize],
+        rng: &mut Pcg64,
+    ) -> (TpuStepCtx, Vec<SlotSpec>) {
+        assert_eq!(unit.len(), 1, "tpu units are single graphs");
+        let g = unit[0];
+        let graph = &self.data.graphs[g];
+        let ncfg = graph.configs.len();
+        let b = self.batch;
+        // B configs, distinct when possible
+        let configs: Vec<usize> = if ncfg >= b {
+            rng.sample_indices(ncfg, b)
+        } else {
+            (0..b).map(|i| i % ncfg).collect()
+        };
+        let j = self.segs[g].num_segments();
+        let feats: Vec<Vec<f32>> = configs
+            .iter()
+            .map(|&c| graph.features_for_config(c))
+            .collect();
+        let slots = configs
+            .iter()
+            .map(|&c| SlotSpec {
+                row: self.pair_row(g, c),
+                num_segments: j,
+                // sum pooling: no 1/J (paper §5.3)
+                invj: 1.0,
+            })
+            .collect();
+        (TpuStepCtx { g, configs, feats }, slots)
+    }
+
+    /// Pairwise ordering mask within the batch (same graph); the core
+    /// hands `bufs.pair` over zeroed, so only the 1-entries are written.
+    fn fill_loss(&self, ctx: &TpuStepCtx, bufs: &mut BatchBufs) {
+        let b = self.batch;
+        let rt = &self.data.graphs[ctx.g].runtimes;
+        for slot in 0..b {
+            for other in 0..b {
+                if rt[ctx.configs[slot]] > rt[ctx.configs[other]] {
+                    bufs.pair[slot * b + other] = 1.0;
+                }
+            }
+        }
+    }
+
+    fn fill_slot(
+        &self,
+        ctx: &TpuStepCtx,
+        slot: usize,
+        seg: usize,
+        nodes: &mut [f32],
+        adj: &mut [f32],
+        mask: &mut [f32],
+    ) {
+        self.segs[ctx.g].fill_padded(
+            &self.data.graphs[ctx.g].csr, seg, self.adj_norm,
+            self.max_nodes, self.feat, Some(ctx.feats[slot].as_slice()),
+            nodes, adj, mask,
+        );
+    }
+
+    fn eval_metric(
+        &self,
+        eng: &Engine,
+        ps: &ParamStore,
+        items: &[usize],
+    ) -> Result<f64> {
+        self.eval(eng, ps, items)
+    }
+
+    fn eval_train_subset(&self) -> Vec<usize> {
+        self.data.train.iter().take(8).copied().collect()
+    }
+
+    fn test_items(&self) -> &[usize] {
+        &self.data.test
+    }
+
+    fn total_segments(&self) -> usize {
+        self.segs.iter().map(|s| s.num_segments()).sum()
     }
 }

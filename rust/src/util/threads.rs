@@ -21,8 +21,36 @@ where
     })
 }
 
+/// Run `f(worker_id, &mut states[worker_id])` on one thread per state slot
+/// and collect results in worker order — the fork-join shape `GstCore`
+/// uses to give each worker exclusive ownership of its reusable batch
+/// buffers while sharing the engine/params/plans by reference.
+/// Panics in workers propagate to the caller.
+pub fn fork_join_with<S, T, F>(states: &mut [S], f: F) -> Vec<T>
+where
+    S: Send,
+    T: Send,
+    F: Fn(usize, &mut S) -> T + Sync,
+{
+    assert!(!states.is_empty());
+    if states.len() == 1 {
+        return vec![f(0, &mut states[0])];
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = states
+            .iter_mut()
+            .enumerate()
+            .map(|(i, s)| scope.spawn({ let f = &f; move || f(i, s) }))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
+    })
+}
+
 /// Split `0..len` into `n` contiguous chunks (final chunks may be smaller);
-/// used to shard minibatches across simulated devices.
+/// used to shard minibatches across data-parallel workers.
 pub fn chunk_ranges(len: usize, n: usize) -> Vec<std::ops::Range<usize>> {
     assert!(n > 0);
     let base = len / n;
@@ -50,6 +78,24 @@ mod tests {
     #[test]
     fn fork_join_single_worker_runs_inline() {
         assert_eq!(fork_join(1, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn fork_join_with_gives_each_worker_its_state() {
+        let mut states = vec![0usize; 4];
+        let out = fork_join_with(&mut states, |i, s| {
+            *s = i + 1;
+            i * 2
+        });
+        assert_eq!(out, vec![0, 2, 4, 6]);
+        assert_eq!(states, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn fork_join_with_single_state_runs_inline() {
+        let mut states = vec![7usize];
+        let out = fork_join_with(&mut states, |_, s| *s + 1);
+        assert_eq!(out, vec![8]);
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! GstTask conformance suite: guarantees every task gets from the shared
+//! `GstCore` driver, exercised over the real AOT artifacts (skipped when
+//! `artifacts/` is not built, like the rest of the integration tier).
+//!
+//! The pure-logic half of the suite (SED weights per `SedMode`, table
+//! write-back versioning, batch-padding rule) lives in unit tests inside
+//! `src/train/core.rs`; this file covers what needs a real engine — above
+//! all the worker-count invariance contract: `cfg.workers` is an
+//! execution knob, so workers=1 and workers=4 must produce **identical
+//! parameters** after training.
+
+use gst::datasets::{MalnetDataset, MalnetSplit, TpuDataset};
+use gst::runtime::Engine;
+use gst::train::{MalnetTrainer, Method, TpuTrainer, TrainConfig};
+
+fn dir(v: &str) -> Option<String> {
+    let d = format!("{}/artifacts/{v}", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&d).is_dir().then_some(d)
+}
+
+fn cfg(method: Method, workers: usize) -> TrainConfig {
+    TrainConfig {
+        method,
+        epochs: 1,
+        finetune_epochs: 0,
+        eval_every: 1,
+        seed: 5,
+        workers,
+        micro_batches: 4,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn workers_1_and_4_produce_identical_parameters_malnet() {
+    let Some(d) = dir("malnet_sage_n128") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let eng = Engine::open(&d).unwrap();
+    let data = MalnetDataset::generate(MalnetSplit::Tiny, 40, 3);
+    let run = |workers: usize| {
+        let mut tr =
+            MalnetTrainer::new(&eng, &data, cfg(Method::GstED, workers))
+                .unwrap();
+        let res = tr.train().unwrap();
+        (tr.ps.values.clone(), tr.ps.m.clone(), res.test_metric)
+    };
+    let (p1, m1, acc1) = run(1);
+    let (p4, m4, acc4) = run(4);
+    // identical parameters AND Adam moments => the whole gradient
+    // sequence (sampling, SED, staleness, averaging) matched bit-for-bit
+    assert_eq!(p1, p4, "parameters diverge with worker count");
+    assert_eq!(m1, m4, "Adam moments diverge with worker count");
+    assert_eq!(acc1, acc4);
+}
+
+#[test]
+fn workers_1_and_4_produce_identical_parameters_tpu() {
+    let Some(d) = dir("tpu_sage_n128") else {
+        eprintln!("skipping: tpu artifacts not built");
+        return;
+    };
+    let eng = Engine::open(&d).unwrap();
+    let data = TpuDataset::generate(6, 6, 11);
+    let run = |workers: usize| {
+        let mut tr =
+            TpuTrainer::new(&eng, &data, cfg(Method::GstEFD, workers))
+                .unwrap();
+        let res = tr.train().unwrap();
+        (tr.ps.values.clone(), res.test_metric)
+    };
+    let (p1, acc1) = run(1);
+    let (p4, acc4) = run(4);
+    assert_eq!(p1, p4, "parameters diverge with worker count");
+    assert_eq!(acc1, acc4);
+}
+
+#[test]
+fn table_writeback_versions_advance_during_training() {
+    let Some(d) = dir("malnet_sage_n128") else {
+        return;
+    };
+    let eng = Engine::open(&d).unwrap();
+    let data = MalnetDataset::generate(MalnetSplit::Tiny, 40, 3);
+    let mut tr =
+        MalnetTrainer::new(&eng, &data, cfg(Method::GstE, 2)).unwrap();
+    assert_eq!(tr.table.coverage(), 0.0);
+    tr.train().unwrap();
+    let now = tr.steps_done();
+    assert!(now > 0);
+    assert!(tr.table.coverage() > 0.0);
+    // every written entry's version is a real step index (< now), and at
+    // least one write happened after the very first optimization step
+    let mut min_age = u32::MAX;
+    for g in 0..tr.table.num_graphs() {
+        for s in 0..tr.table.segments_of(g) {
+            if let Some(age) = tr.table.staleness(g, s, now) {
+                assert!(age <= now, "version out of range");
+                min_age = min_age.min(age);
+            }
+        }
+    }
+    assert!(
+        min_age < now,
+        "no table entry was written by a later training step"
+    );
+}
+
+#[test]
+fn micro_batches_scale_the_effective_batch() {
+    let Some(d) = dir("malnet_sage_n128") else {
+        return;
+    };
+    let eng = Engine::open(&d).unwrap();
+    let data = MalnetDataset::generate(MalnetSplit::Tiny, 40, 3);
+    // 4 micro-batches per step over the same epoch = 1/4 the optimizer
+    // applies of the 1-micro-batch run (drop-last grouping)
+    let steps = |micro: usize| {
+        let mut c = cfg(Method::GstED, 1);
+        c.micro_batches = micro;
+        let mut tr = MalnetTrainer::new(&eng, &data, c).unwrap();
+        tr.train().unwrap();
+        // steps_done counts micro-batches; the timer counts optimizer
+        // steps (groups)
+        (tr.steps_done(), tr.timer.count())
+    };
+    let (micro1, groups1) = steps(1);
+    let (micro4, groups4) = steps(4);
+    assert_eq!(micro1, micro4, "same micro-batch stream either way");
+    assert_eq!(groups4, (groups1 + 3) / 4);
+}
