@@ -1,0 +1,125 @@
+//! Segment fill hot path: direct `fill_padded` (per-call normalization)
+//! vs `PreparedSegments::fill` (precomputed weights, memcpy + scatter) vs
+//! a warm `FillCache` (three memcpys). Needs no AOT artifacts — this is
+//! pure host-side work. Emits BENCH_fill_ns.json (ns per fill) for the
+//! CI perf trajectory.
+//!
+//!     cargo bench --bench fill_hotpath
+
+#[path = "harness.rs"]
+mod harness;
+
+use gst::datasets::{MalnetDataset, MalnetSplit};
+use gst::partition::Algorithm;
+use gst::segment::{AdjNorm, FillCache, PreparedSegments, SegmentedGraph};
+use gst::util::rng::Pcg64;
+
+const MAX_NODES: usize = 128;
+const FEAT: usize = 16;
+
+fn main() {
+    let data = MalnetDataset::generate(MalnetSplit::Large, 12, 0);
+    let mut rng = Pcg64::new(0, 0x66).stream("partition");
+    let segs: Vec<SegmentedGraph> = data
+        .graphs
+        .iter()
+        .map(|g| {
+            let set = Algorithm::MetisLike.partition(g, MAX_NODES, &mut rng);
+            SegmentedGraph::new(g, &set)
+        })
+        .collect();
+    let prepared: Vec<PreparedSegments> = data
+        .graphs
+        .iter()
+        .zip(&segs)
+        .map(|(g, sg)| {
+            PreparedSegments::new(g, sg, AdjNorm::SymSelfLoop, MAX_NODES, FEAT)
+        })
+        .collect();
+    let pairs: Vec<(usize, usize)> = segs
+        .iter()
+        .enumerate()
+        .flat_map(|(g, sg)| (0..sg.num_segments()).map(move |s| (g, s)))
+        .collect();
+    let fills = pairs.len();
+    println!(
+        "\nfill hot path ({} graphs, {} fills/iter, N={}, F={}):",
+        data.graphs.len(),
+        fills,
+        MAX_NODES,
+        FEAT
+    );
+
+    let mut nodes = vec![0f32; MAX_NODES * FEAT];
+    let mut adj = vec![0f32; MAX_NODES * MAX_NODES];
+    let mut mask = vec![0f32; MAX_NODES];
+
+    let bench = harness::Bench::new("direct fill_padded").warmup(2).iters(12);
+    let direct_ms = bench.run(|| {
+        for &(g, s) in &pairs {
+            segs[g].fill_padded(
+                &data.graphs[g],
+                s,
+                AdjNorm::SymSelfLoop,
+                MAX_NODES,
+                FEAT,
+                None,
+                &mut nodes,
+                &mut adj,
+                &mut mask,
+            );
+        }
+        mask[0]
+    });
+
+    let bench = harness::Bench::new("prepared fill").warmup(2).iters(12);
+    let prepared_ms = bench.run(|| {
+        for &(g, s) in &pairs {
+            prepared[g].fill(s, None, &mut nodes, &mut adj, &mut mask);
+        }
+        mask[0]
+    });
+
+    // a budget large enough to hold every block: steady state is all hits
+    let cache =
+        FillCache::new(256, MAX_NODES * FEAT, MAX_NODES * MAX_NODES, MAX_NODES)
+            .unwrap();
+    for &(g, s) in &pairs {
+        prepared[g].fill(s, None, &mut nodes, &mut adj, &mut mask);
+        cache.put(((g as u64) << 24) | s as u64, &nodes, &adj, &mask);
+    }
+    let bench = harness::Bench::new("cached fill (warm)").warmup(2).iters(12);
+    let cached_ms = bench.run(|| {
+        for &(g, s) in &pairs {
+            let hit = cache.get(
+                ((g as u64) << 24) | s as u64,
+                &mut nodes,
+                &mut adj,
+                &mut mask,
+            );
+            assert!(hit, "warm cache must serve every block");
+        }
+        mask[0]
+    });
+
+    let per_fill = |ms: f64| ms * 1e6 / fills as f64;
+    let stats = cache.stats();
+    println!(
+        "\nper-fill: direct {:.0} ns, prepared {:.0} ns ({:.2}x), \
+         cached {:.0} ns ({:.2}x); cache {} entries, {} hits",
+        per_fill(direct_ms),
+        per_fill(prepared_ms),
+        direct_ms / prepared_ms,
+        per_fill(cached_ms),
+        direct_ms / cached_ms,
+        cache.len(),
+        stats.hits,
+    );
+
+    let series = vec![
+        ("direct_fill_padded".to_string(), per_fill(direct_ms)),
+        ("prepared_fill".to_string(), per_fill(prepared_ms)),
+        ("cached_fill".to_string(), per_fill(cached_ms)),
+    ];
+    harness::emit_json_unit("fill_ns", "ns", &series, false);
+}

@@ -116,3 +116,36 @@ pub fn emit_json(name: &str, entries: &[(String, f64)], skipped: bool) {
         Err(e) => eprintln!("emit_json: {path}: {e}"),
     }
 }
+
+/// Like [`emit_json`] but for benches whose natural unit is not
+/// milliseconds (e.g. ns per fill): the record carries an explicit
+/// `unit` and a unit-neutral `mean` value key. `emit_json`'s `mean_ms`
+/// layout stays untouched for the existing trajectory consumers.
+pub fn emit_json_unit(
+    name: &str,
+    unit: &str,
+    entries: &[(String, f64)],
+    skipped: bool,
+) {
+    use gst::util::json::Json;
+    let payload = Json::obj(vec![
+        ("bench", Json::str(name)),
+        ("unit", Json::str(unit)),
+        ("skipped", Json::Bool(skipped)),
+        (
+            "results",
+            Json::arr(entries.iter().map(|(label, v)| {
+                Json::obj(vec![
+                    ("label", Json::str(label)),
+                    ("mean", Json::num(*v)),
+                ])
+            })),
+        ),
+    ]);
+    let dir = std::env::var("BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let path = format!("{dir}/BENCH_{name}.json");
+    match std::fs::write(&path, payload.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("emit_json_unit: {path}: {e}"),
+    }
+}

@@ -52,7 +52,7 @@ fn usage() -> String {
          \x20 experiment --id <{}|all> [--quick] [--artifacts DIR] [--out DIR]\n\
          \x20 train --dataset <malnet-tiny|malnet-large|tpu> --method <full|gst|gst-one|gst+e|gst+ef|gst+ed|gst+efd>\n\
          \x20       [--backbone gcn|sage|gps] [--epochs N] [--keep-p P] [--partition ALG] [--seed S]\n\
-         \x20       [--micro-batches M] [--workers W]\n\
+         \x20       [--micro-batches M] [--workers W] [--fill-cache-mb MB]\n\
          \x20 data-stats [--graphs N]\n\
          \x20 partition [--alg ALG] [--max-size N]\n\
          \x20 memory",
@@ -99,6 +99,11 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             "micro-batches (simulated devices) averaged per step",
         )
         .opt("workers", Some("1"), "worker threads (execution only)")
+        .opt(
+            "fill-cache-mb",
+            Some("0"),
+            "padded fill-block cache budget, MiB (execution only)",
+        )
         .opt("graphs", Some("60"), "synthetic dataset size")
         .opt("artifacts", Some("artifacts"), "AOT artifact root")
         .opt("max-nodes", Some("128"), "segment size variant (32|64|128|256)")
@@ -124,6 +129,9 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             .ok_or_else(|| anyhow!("bad --partition"))?,
         eval_every: 1,
         lr: args.get("lr").and_then(|s| s.parse::<f32>().ok()),
+        fill_cache_mb: args
+            .get_usize("fill-cache-mb")
+            .map_err(|e| anyhow!(e))?,
     };
     let count = args.get_usize("graphs").map_err(|e| anyhow!(e))?;
     let root = args.get("artifacts").unwrap();
@@ -171,6 +179,20 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             for (k, v) in counts {
                 println!("  calls {k}: {v}");
             }
+            if res.fill_cache.total() > 0 {
+                println!(
+                    "  fill-cache hits: {}/{} ({:.1}%)",
+                    res.fill_cache.hits,
+                    res.fill_cache.total(),
+                    100.0 * res.fill_cache.hit_rate()
+                );
+            }
+            println!(
+                "  param-literal cache hits: {}/{} ({:.1}%)",
+                res.param_cache.hits,
+                res.param_cache.total(),
+                100.0 * res.param_cache.hit_rate()
+            );
         }
         other => bail!("unknown dataset `{other}`"),
     }

@@ -82,6 +82,30 @@ pub fn mean_opa(per_graph: &[(Vec<f32>, Vec<f32>)]) -> f64 {
         / per_graph.len() as f64
 }
 
+/// Hit/miss counters for the execution-only caches (the segment
+/// fill-block cache and the engine's parameter-literal cache — DESIGN.md
+/// §7). Cheap to copy; snapshots are taken at end of run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn total(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hit fraction in [0, 1] (0.0 before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.total() as f64
+        }
+    }
+}
+
 /// Accumulates per-epoch points for the Figure 2/5/6 curves.
 #[derive(Clone, Debug, Default)]
 pub struct Curve {
@@ -252,6 +276,16 @@ mod tests {
         t.start();
         t.stop();
         assert_eq!(t.count(), 2);
+    }
+
+    #[test]
+    fn cache_stats_rates() {
+        let s = CacheStats::default();
+        assert_eq!(s.total(), 0);
+        assert_eq!(s.hit_rate(), 0.0);
+        let s = CacheStats { hits: 3, misses: 1 };
+        assert_eq!(s.total(), 4);
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -11,11 +11,21 @@
 //! only on first compile; every steady-state call takes the read lock) and
 //! the call counters behind a `Mutex`, so `GstCore`'s worker threads execute
 //! micro-batches through one shared engine concurrently.
+//!
+//! The engine also caches marshalled **parameter literals** per
+//! [`ParamStore`] (keyed by [`ParamStore::cache_key`]): the dozens of
+//! `embed_fwd`/`grad_step` calls within one optimizer step share the same
+//! parameters, so [`Engine::call_with_params`] marshals them once per
+//! generation instead of per call. Execution-only — the literal contents
+//! are identical either way.
 
-use super::manifest::{Dtype, Manifest};
+use super::manifest::{Dtype, FnSpec, Manifest, TensorSpec};
+use super::params::ParamStore;
+use crate::metrics::CacheStats;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
-use std::sync::{Mutex, RwLock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 /// A host-side tensor heading into (or out of) an executable.
 #[derive(Clone, Debug)]
@@ -82,6 +92,9 @@ impl<'a> From<&'a HostTensor> for HostArg<'a> {
     }
 }
 
+/// Parameter-literal cache entry: (store generation, shared literal set).
+type ParamLitEntry = (u64, Arc<Vec<xla::Literal>>);
+
 /// Executable cache for one artifact variant.
 pub struct Engine {
     pub manifest: Manifest,
@@ -90,6 +103,11 @@ pub struct Engine {
     exes: RwLock<HashMap<String, xla::PjRtLoadedExecutable>>,
     /// cumulative executions per function (observability + perf accounting)
     calls: Mutex<HashMap<String, usize>>,
+    /// marshalled parameter literals per store id, tagged with the store
+    /// generation they were built from
+    param_lits: RwLock<HashMap<u64, ParamLitEntry>>,
+    param_hits: AtomicU64,
+    param_misses: AtomicU64,
 }
 
 impl Engine {
@@ -104,6 +122,9 @@ impl Engine {
             client,
             exes: RwLock::new(HashMap::new()),
             calls: Mutex::new(HashMap::new()),
+            param_lits: RwLock::new(HashMap::new()),
+            param_hits: AtomicU64::new(0),
+            param_misses: AtomicU64::new(0),
         })
     }
 
@@ -146,10 +167,11 @@ impl Engine {
         self.call_ref(name, &args)
     }
 
-    /// Execute with borrowed inputs — the training hot path.
+    /// Execute with borrowed inputs — the training hot path. The spec is
+    /// borrowed for the duration of the call (no per-call clone).
     pub fn call_ref(&self, name: &str, inputs: &[HostArg]) -> Result<Vec<HostTensor>> {
         self.ensure_compiled(name)?;
-        let spec = self.manifest.func(name)?.clone();
+        let spec = self.manifest.func(name)?;
         if inputs.len() != spec.inputs.len() {
             bail!(
                 "{name}: {} inputs given, manifest wants {}",
@@ -157,30 +179,86 @@ impl Engine {
                 spec.inputs.len()
             );
         }
-        // marshal host -> literals
         let mut literals = Vec::with_capacity(inputs.len());
         for (t, ispec) in inputs.iter().zip(&spec.inputs) {
-            if t.len() != ispec.elems() {
-                bail!(
-                    "{name}:{}: {} elems given, spec wants {:?}",
-                    ispec.name,
-                    t.len(),
-                    ispec.shape
-                );
-            }
-            let dims: Vec<i64> =
-                ispec.shape.iter().map(|&d| d as i64).collect();
-            let lit = match (t, ispec.dtype) {
-                (HostArg::F32(v), Dtype::F32) => {
-                    reshape_or_scalar(xla::Literal::vec1(v), &dims, v.len())?
-                }
-                (HostArg::S32(v), Dtype::S32) => {
-                    reshape_or_scalar(xla::Literal::vec1(v), &dims, v.len())?
-                }
-                _ => bail!("{name}:{}: dtype mismatch", ispec.name),
-            };
-            literals.push(lit);
+            literals.push(marshal(name, ispec, t)?);
         }
+        let args: Vec<&xla::Literal> = literals.iter().collect();
+        self.execute_marshalled(name, spec, &args)
+    }
+
+    /// Execute `name` whose leading inputs are `ps`'s parameter set,
+    /// serving the parameter literals from the per-store cache (keyed by
+    /// [`ParamStore::cache_key`]; invalidated by [`ParamStore::touch`]).
+    /// `rest` holds the remaining positional inputs.
+    pub fn call_with_params(
+        &self,
+        name: &str,
+        ps: &ParamStore,
+        rest: &[HostArg],
+    ) -> Result<Vec<HostTensor>> {
+        self.ensure_compiled(name)?;
+        let spec = self.manifest.func(name)?;
+        let np = ps.values.len();
+        if np + rest.len() != spec.inputs.len() {
+            bail!(
+                "{name}: {np} params + {} inputs given, manifest wants {}",
+                rest.len(),
+                spec.inputs.len()
+            );
+        }
+        let params = self.param_literals(name, spec, ps)?;
+        let mut tail = Vec::with_capacity(rest.len());
+        for (t, ispec) in rest.iter().zip(&spec.inputs[np..]) {
+            tail.push(marshal(name, ispec, t)?);
+        }
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(np + tail.len());
+        args.extend(params.iter());
+        args.extend(tail.iter());
+        self.execute_marshalled(name, spec, &args)
+    }
+
+    /// Fetch (or build) the marshalled parameter literals for `ps`.
+    /// Cached per store id; rebuilt whenever the store generation moved.
+    /// All parameter-leading functions share one entry — the manifest
+    /// orders every function's leading inputs identically.
+    fn param_literals(
+        &self,
+        name: &str,
+        spec: &FnSpec,
+        ps: &ParamStore,
+    ) -> Result<Arc<Vec<xla::Literal>>> {
+        let (id, gen) = ps.cache_key();
+        if let Some((cached_gen, lits)) =
+            self.param_lits.read().expect("param lits lock").get(&id)
+        {
+            if *cached_gen == gen && lits.len() == ps.values.len() {
+                self.param_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(lits.clone());
+            }
+        }
+        self.param_misses.fetch_add(1, Ordering::Relaxed);
+        let mut lits = Vec::with_capacity(ps.values.len());
+        for (v, ispec) in ps.values.iter().zip(&spec.inputs) {
+            lits.push(marshal(name, ispec, &HostArg::F32(v))?);
+        }
+        let lits = Arc::new(lits);
+        self.param_lits
+            .write()
+            .expect("param lits lock")
+            .insert(id, (gen, lits.clone()));
+        Ok(lits)
+    }
+
+    /// Shared execution tail: count the call, run the executable over
+    /// already-marshalled literals, unmarshal + validate the outputs.
+    fn execute_marshalled(
+        &self,
+        name: &str,
+        spec: &FnSpec,
+        literals: &[&xla::Literal],
+    ) -> Result<Vec<HostTensor>> {
         *self
             .calls
             .lock()
@@ -190,7 +268,7 @@ impl Engine {
         let exes = self.exes.read().expect("exes lock");
         let exe = exes.get(name).expect("ensured above");
         let result = exe
-            .execute::<xla::Literal>(&literals)
+            .execute::<&xla::Literal>(literals)
             .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
         let tuple = result[0][0]
             .to_literal_sync()
@@ -236,8 +314,42 @@ impl Engine {
         self.calls.lock().expect("calls lock").clone()
     }
 
+    /// Hit/miss counters of the parameter-literal cache.
+    pub fn param_cache_stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.param_hits.load(Ordering::Relaxed),
+            misses: self.param_misses.load(Ordering::Relaxed),
+        }
+    }
+
     pub fn dir(&self) -> &str {
         &self.dir
+    }
+}
+
+/// Marshal one host argument against its input spec.
+fn marshal(
+    name: &str,
+    ispec: &TensorSpec,
+    t: &HostArg,
+) -> Result<xla::Literal> {
+    if t.len() != ispec.elems() {
+        bail!(
+            "{name}:{}: {} elems given, spec wants {:?}",
+            ispec.name,
+            t.len(),
+            ispec.shape
+        );
+    }
+    let dims: Vec<i64> = ispec.shape.iter().map(|&d| d as i64).collect();
+    match (t, ispec.dtype) {
+        (HostArg::F32(v), Dtype::F32) => {
+            reshape_or_scalar(xla::Literal::vec1(v), &dims, v.len())
+        }
+        (HostArg::S32(v), Dtype::S32) => {
+            reshape_or_scalar(xla::Literal::vec1(v), &dims, v.len())
+        }
+        _ => bail!("{name}:{}: dtype mismatch", ispec.name),
     }
 }
 

@@ -2,15 +2,47 @@
 
 use super::manifest::Manifest;
 use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-unique store ids, so engine-side literal caches can tell
+/// distinct stores (and clones) apart without holding references.
+static STORE_IDS: AtomicU64 = AtomicU64::new(0);
+
+fn next_store_id() -> u64 {
+    STORE_IDS.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Model parameters plus Adam moments, all in manifest (name-sorted) order.
-#[derive(Clone, Debug)]
+///
+/// Each store carries a cache identity: a process-unique `id` plus a
+/// `gen` counter bumped by [`ParamStore::touch`] on every mutation of
+/// `values`. The engine's parameter-literal cache keys on
+/// [`ParamStore::cache_key`], so literals are re-marshalled only when the
+/// parameters actually changed (once per optimizer apply). Code that
+/// writes `values` directly must call `touch` afterwards.
+#[derive(Debug)]
 pub struct ParamStore {
     pub values: Vec<Vec<f32>>,
     pub m: Vec<Vec<f32>>,
     pub v: Vec<Vec<f32>>,
     /// Adam step counter (1-based at first apply).
     pub t: u32,
+    id: u64,
+    gen: u64,
+}
+
+impl Clone for ParamStore {
+    /// Clones mutate independently, so they get a fresh cache identity.
+    fn clone(&self) -> ParamStore {
+        ParamStore {
+            values: self.values.clone(),
+            m: self.m.clone(),
+            v: self.v.clone(),
+            t: self.t,
+            id: next_store_id(),
+            gen: 0,
+        }
+    }
 }
 
 impl ParamStore {
@@ -40,7 +72,28 @@ impl ParamStore {
         }
         let m = values.iter().map(|v| vec![0f32; v.len()]).collect();
         let v2 = values.iter().map(|v| vec![0f32; v.len()]).collect();
-        Ok(ParamStore { values, m, v: v2, t: 0 })
+        Ok(ParamStore {
+            values,
+            m,
+            v: v2,
+            t: 0,
+            id: next_store_id(),
+            gen: 0,
+        })
+    }
+
+    /// (store id, generation) — the engine literal cache's key. The id is
+    /// unique per store; the generation advances on every [`touch`].
+    ///
+    /// [`touch`]: ParamStore::touch
+    pub fn cache_key(&self) -> (u64, u64) {
+        (self.id, self.gen)
+    }
+
+    /// Record a mutation of `values`, invalidating any cached parameter
+    /// literals keyed on the previous generation.
+    pub fn touch(&mut self) {
+        self.gen = self.gen.wrapping_add(1);
     }
 
     pub fn num_params(&self) -> usize {
@@ -61,6 +114,8 @@ impl ParamStore {
             m: pick(&self.m),
             v: pick(&self.v),
             t: self.t,
+            id: next_store_id(),
+            gen: 0,
         }
     }
 
@@ -72,6 +127,7 @@ impl ParamStore {
             self.m[i].copy_from_slice(&sub.m[k]);
             self.v[i].copy_from_slice(&sub.v[k]);
         }
+        self.touch();
     }
 }
 
@@ -110,5 +166,32 @@ mod tests {
         ps.write_subset(&head, &sub);
         assert_eq!(ps.values[1][0], 99.0);
         assert_eq!(ps.values[0][0], 0.0);
+    }
+
+    #[test]
+    fn cache_keys_track_identity_and_mutation() {
+        let dir = std::env::temp_dir().join("gst_params_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let man = tiny_manifest();
+        let bytes: Vec<u8> = (0..6u32)
+            .flat_map(|x| (x as f32).to_le_bytes())
+            .collect();
+        std::fs::write(dir.join("init_params.bin"), bytes).unwrap();
+        let mut ps = ParamStore::load(dir.to_str().unwrap(), &man).unwrap();
+        let k0 = ps.cache_key();
+        // touch bumps the generation but keeps the store id
+        ps.touch();
+        let k1 = ps.cache_key();
+        assert_eq!(k0.0, k1.0);
+        assert_ne!(k0.1, k1.1);
+        // clones and subsets are distinct stores (fresh ids)
+        let clone = ps.clone();
+        assert_ne!(clone.cache_key().0, ps.cache_key().0);
+        let sub = ps.subset(&man.head_indices());
+        assert_ne!(sub.cache_key().0, ps.cache_key().0);
+        // write_subset mutates values, so it must bump the generation
+        let before = ps.cache_key();
+        ps.write_subset(&man.head_indices(), &sub);
+        assert_ne!(ps.cache_key().1, before.1);
     }
 }

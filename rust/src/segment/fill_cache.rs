@@ -1,0 +1,241 @@
+//! Byte-budgeted cache of fully padded `(nodes, adj, mask)` fill blocks.
+//!
+//! [`super::PreparedSegments::fill`] already reduces a fill to memcpy +
+//! sparse scatter; this cache removes even that for the hottest segments
+//! by storing the final padded tensors and serving them with three
+//! memcpys. Eviction is clock (second chance): a hit sets the entry's
+//! reference bit, the clock hand sweeps and evicts the first entry whose
+//! bit is clear.
+//!
+//! The cache is execution-only: a served block is bit-identical to a
+//! fresh fill (pinned by the segment property test), so trained
+//! parameters never depend on the budget (`cfg.fill_cache_mb`). Hit/miss
+//! counters surface through [`CacheStats`].
+//!
+//! Interior mutability (one `Mutex`) keeps `get`/`put` callable from the
+//! read-only task fill hooks that run concurrently on worker threads.
+
+use crate::metrics::CacheStats;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Fixed-block-size cache keyed by an opaque `u64` (tasks encode their
+/// (row, segment) identity into it).
+pub struct FillCache {
+    nodes_len: usize,
+    adj_len: usize,
+    mask_len: usize,
+    /// max entries the byte budget holds
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    map: HashMap<u64, usize>,
+    /// key stored in each slot (for eviction-time map removal)
+    keys: Vec<u64>,
+    /// clock reference bits
+    refbit: Vec<bool>,
+    hand: usize,
+    /// slot-major block storage, grown lazily up to capacity
+    data: Vec<f32>,
+    hits: u64,
+    misses: u64,
+}
+
+impl FillCache {
+    /// Cache holding at most `budget_mb` MiB of blocks sized for the given
+    /// per-tensor lengths. Returns `None` when the budget holds no entry
+    /// (`budget_mb = 0` disables caching).
+    pub fn new(
+        budget_mb: usize,
+        nodes_len: usize,
+        adj_len: usize,
+        mask_len: usize,
+    ) -> Option<FillCache> {
+        let block_bytes = (nodes_len + adj_len + mask_len) * 4;
+        let capacity = (budget_mb << 20) / block_bytes.max(1);
+        if capacity == 0 {
+            return None;
+        }
+        Some(FillCache {
+            nodes_len,
+            adj_len,
+            mask_len,
+            capacity,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                keys: Vec::new(),
+                refbit: Vec::new(),
+                hand: 0,
+                data: Vec::new(),
+                hits: 0,
+                misses: 0,
+            }),
+        })
+    }
+
+    fn block(&self) -> usize {
+        self.nodes_len + self.adj_len + self.mask_len
+    }
+
+    /// Copy `key`'s cached block into the output views; returns `false`
+    /// (counting a miss) when the key is absent.
+    pub fn get(
+        &self,
+        key: u64,
+        nodes_out: &mut [f32],
+        adj_out: &mut [f32],
+        mask_out: &mut [f32],
+    ) -> bool {
+        let mut inner = self.inner.lock().expect("fill cache lock");
+        let Some(&slot) = inner.map.get(&key) else {
+            inner.misses += 1;
+            return false;
+        };
+        inner.hits += 1;
+        inner.refbit[slot] = true;
+        let base = slot * self.block();
+        let (n, a) = (self.nodes_len, self.adj_len);
+        nodes_out.copy_from_slice(&inner.data[base..base + n]);
+        adj_out.copy_from_slice(&inner.data[base + n..base + n + a]);
+        mask_out.copy_from_slice(
+            &inner.data[base + n + a..base + self.block()],
+        );
+        true
+    }
+
+    /// Insert (or refresh) `key`'s block, clock-evicting when full.
+    pub fn put(
+        &self,
+        key: u64,
+        nodes: &[f32],
+        adj: &[f32],
+        mask: &[f32],
+    ) {
+        assert_eq!(nodes.len(), self.nodes_len);
+        assert_eq!(adj.len(), self.adj_len);
+        assert_eq!(mask.len(), self.mask_len);
+        let block = self.block();
+        let mut inner = self.inner.lock().expect("fill cache lock");
+        let slot = if let Some(&s) = inner.map.get(&key) {
+            s
+        } else if inner.keys.len() < self.capacity {
+            let s = inner.keys.len();
+            inner.keys.push(key);
+            inner.refbit.push(false);
+            inner.data.resize((s + 1) * block, 0.0);
+            inner.map.insert(key, s);
+            s
+        } else {
+            // clock sweep: clear reference bits until a cold slot appears
+            let mut hand = inner.hand;
+            while inner.refbit[hand] {
+                inner.refbit[hand] = false;
+                hand = (hand + 1) % self.capacity;
+            }
+            inner.hand = (hand + 1) % self.capacity;
+            let old = inner.keys[hand];
+            inner.map.remove(&old);
+            inner.keys[hand] = key;
+            inner.map.insert(key, hand);
+            hand
+        };
+        // only hits set the reference bit: a block is "hot" once it has
+        // been served, not merely inserted (otherwise a full cache has
+        // every bit set and the sweep degenerates to FIFO)
+        let base = slot * block;
+        let (n, a) = (self.nodes_len, self.adj_len);
+        inner.data[base..base + n].copy_from_slice(nodes);
+        inner.data[base + n..base + n + a].copy_from_slice(adj);
+        inner.data[base + n + a..base + block].copy_from_slice(mask);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("fill cache lock").keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cumulative hit/miss counters.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().expect("fill cache lock");
+        CacheStats { hits: inner.hits, misses: inner.misses }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Blocks of (2 + 4 + 2) floats = 32 bytes; 1 MiB holds thousands.
+    fn tiny() -> FillCache {
+        FillCache::new(1, 2, 4, 2).unwrap()
+    }
+
+    #[test]
+    fn zero_budget_disables() {
+        assert!(FillCache::new(0, 2, 4, 2).is_none());
+    }
+
+    #[test]
+    fn roundtrip_and_counters() {
+        let c = tiny();
+        let (mut n, mut a, mut m) = ([9f32; 2], [9f32; 4], [9f32; 2]);
+        assert!(!c.get(7, &mut n, &mut a, &mut m));
+        c.put(7, &[1.0, 2.0], &[3.0, 4.0, 5.0, 6.0], &[1.0, 0.0]);
+        assert!(c.get(7, &mut n, &mut a, &mut m));
+        assert_eq!(n, [1.0, 2.0]);
+        assert_eq!(a, [3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m, [1.0, 0.0]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn put_refreshes_existing_entry() {
+        let c = tiny();
+        let (mut n, mut a, mut m) = ([0f32; 2], [0f32; 4], [0f32; 2]);
+        c.put(1, &[1.0; 2], &[1.0; 4], &[1.0; 2]);
+        c.put(1, &[2.0; 2], &[2.0; 4], &[2.0; 2]);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(1, &mut n, &mut a, &mut m));
+        assert_eq!(n, [2.0; 2]);
+    }
+
+    #[test]
+    fn clock_eviction_keeps_hot_entries() {
+        // capacity-sized exactly: blocks of 8 floats (32 B), 1 MiB budget
+        // holds plenty, so build a cache whose capacity we then saturate
+        let c = FillCache::new(1, 2, 4, 2).unwrap();
+        let cap = c.capacity();
+        let (mut n, mut a, mut m) = ([0f32; 2], [0f32; 4], [0f32; 2]);
+        for k in 0..cap as u64 {
+            c.put(k, &[k as f32; 2], &[0.0; 4], &[0.0; 2]);
+        }
+        assert_eq!(c.len(), cap);
+        // touch key 0 (sets its reference bit), then insert a new key:
+        // the sweep must skip the hot entry and evict a cold one
+        assert!(c.get(0, &mut n, &mut a, &mut m));
+        c.put(cap as u64, &[7.0; 2], &[0.0; 4], &[0.0; 2]);
+        assert_eq!(c.len(), cap);
+        assert!(c.get(0, &mut n, &mut a, &mut m), "hot entry evicted");
+        assert!(c.get(cap as u64, &mut n, &mut a, &mut m));
+    }
+
+    #[test]
+    fn eviction_is_bounded_by_capacity() {
+        let c = FillCache::new(1, 2, 4, 2).unwrap();
+        let cap = c.capacity();
+        for k in 0..(cap as u64) * 3 {
+            c.put(k, &[k as f32; 2], &[0.0; 4], &[0.0; 2]);
+        }
+        assert_eq!(c.len(), cap);
+    }
+}

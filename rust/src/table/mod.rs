@@ -93,15 +93,22 @@ impl EmbeddingTable {
         written as f64 / self.version.len() as f64
     }
 
-    /// Mean staleness over written entries at `now`.
+    /// Mean staleness over written entries at `now` (0.0 when none),
+    /// computed streaming — no per-call age buffer.
     pub fn mean_staleness(&self, now: u32) -> f64 {
-        let ages: Vec<f64> = self
-            .version
-            .iter()
-            .filter(|&&v| v != NEVER)
-            .map(|&v| (now - v) as f64)
-            .collect();
-        crate::util::stats::mean(&ages)
+        let mut sum = 0f64;
+        let mut count = 0usize;
+        for &v in &self.version {
+            if v != NEVER {
+                sum += (now - v) as f64;
+                count += 1;
+            }
+        }
+        if count == 0 {
+            0.0
+        } else {
+            sum / count as f64
+        }
     }
 
     /// Bytes held by the table (the "memory overhead" the paper trades for

@@ -31,9 +31,9 @@
 //! execution knob, `micro_batches` is the semantic one. The conformance
 //! suite pins this (workers=1 vs workers=4, same parameters).
 
-use super::ops::{self, BatchBufs};
+use super::ops::{self, BatchBufs, GradAccum};
 use super::{Method, RunResult, SedMode, TrainConfig};
-use crate::metrics::{Curve, StepTimer};
+use crate::metrics::{CacheStats, Curve, StepTimer};
 use crate::runtime::{Engine, ParamStore};
 use crate::sed;
 use crate::table::EmbeddingTable;
@@ -64,6 +64,8 @@ pub struct CoreEnv<'e> {
     pub rng: &'e mut Pcg64,
     pub timer: &'e mut StepTimer,
     pub step: &'e mut u32,
+    /// shared in-place gradient reducer (core-owned, reused every group)
+    pub accum: &'e mut GradAccum,
 }
 
 /// Effective learning rate: config override or the manifest default —
@@ -155,6 +157,12 @@ pub trait GstTask: Sync {
     /// Total segments across the dataset (observability).
     fn total_segments(&self) -> usize;
 
+    /// Hit/miss counters of the task's padded fill-block cache, if it
+    /// runs one (`cfg.fill_cache_mb`). Default: no cache.
+    fn fill_cache_stats(&self) -> CacheStats {
+        CacheStats::default()
+    }
+
     /// Full Graph Training baseline epoch. Default: unsupported (tasks
     /// whose constructor rejects `Method::FullGraph` never reach this).
     fn full_graph_epoch(&mut self, _env: &mut CoreEnv<'_>) -> Result<()> {
@@ -240,6 +248,8 @@ pub struct GstCore<'a, T: GstTask> {
     pub timer: StepTimer,
     /// one reusable buffer set per worker (embed staging + grad batch)
     bufs: Vec<BatchBufs>,
+    /// in-place gradient reducer, reused across every optimizer group
+    accum: GradAccum,
 }
 
 impl<'a, T: GstTask> GstCore<'a, T> {
@@ -275,6 +285,7 @@ impl<'a, T: GstTask> GstCore<'a, T> {
             first_epoch_steps: 0,
             timer: StepTimer::default(),
             bufs,
+            accum: GradAccum::new(&eng.manifest),
         })
     }
 
@@ -295,11 +306,30 @@ impl<'a, T: GstTask> GstCore<'a, T> {
     /// Split `self` into the task and a [`CoreEnv`] over the remaining
     /// state (disjoint field borrows).
     fn split_env(&mut self) -> (&mut T, CoreEnv<'_>) {
-        let GstCore { task, eng, cfg, ps, table, rng, timer, step, .. } =
-            self;
+        let GstCore {
+            task,
+            eng,
+            cfg,
+            ps,
+            table,
+            rng,
+            timer,
+            step,
+            accum,
+            ..
+        } = self;
         (
             task,
-            CoreEnv { eng: *eng, cfg: &*cfg, ps, table, rng, timer, step },
+            CoreEnv {
+                eng: *eng,
+                cfg: &*cfg,
+                ps,
+                table,
+                rng,
+                timer,
+                step,
+                accum,
+            },
         )
     }
 
@@ -353,6 +383,8 @@ impl<'a, T: GstTask> GstCore<'a, T> {
             step_ms: self.timer.mean_ms_from(self.first_epoch_steps),
             curve,
             call_counts: self.eng.call_counts(),
+            fill_cache: self.task.fill_cache_stats(),
+            param_cache: self.eng.param_cache_stats(),
         })
     }
 
@@ -446,11 +478,12 @@ impl<'a, T: GstTask> GstCore<'a, T> {
         for (plan, res) in plans.iter().zip(&results) {
             commit_step(&mut self.table, method.uses_table(), plan, res, td);
         }
-        let sets: Vec<Vec<Vec<f32>>> =
-            results.into_iter().map(|r| r.grads).collect();
-        let avg = ops::average_grads(&sets);
+        for res in &results {
+            self.accum.add(&res.grads);
+        }
         let lr = effective_lr(&self.cfg, eng);
-        ops::apply(eng, &mut self.ps, &avg, lr)?;
+        let avg = self.accum.mean();
+        ops::apply(eng, &mut self.ps, avg, lr)?;
         self.step += plans.len() as u32;
         self.timer.stop();
         Ok(())

@@ -11,10 +11,10 @@ use super::core::{CoreEnv, GstCore, GstTask, SlotSpec};
 use super::ops::{self, BatchBufs};
 use super::{Method, TrainConfig};
 use crate::datasets::MalnetDataset;
-use crate::metrics::{self, Curve};
+use crate::metrics::{self, CacheStats, Curve};
 use crate::partition::Algorithm;
 use crate::runtime::{Engine, ParamStore};
-use crate::segment::{AdjNorm, SegmentedGraph};
+use crate::segment::{FillCache, PreparedSegments, SegmentedGraph};
 use crate::util::rng::Pcg64;
 use anyhow::{bail, Result};
 
@@ -48,10 +48,12 @@ impl<'a> GstCore<'a, MalnetTask<'a>> {
 pub struct MalnetTask<'a> {
     data: &'a MalnetDataset,
     segs: Vec<SegmentedGraph>,
+    /// per-graph precomputed fills (normalized edge lists + packed
+    /// features) — every fill site goes through these
+    prepared: Vec<PreparedSegments>,
+    /// optional padded fill-block cache (`cfg.fill_cache_mb`)
+    fill_cache: Option<FillCache>,
     batch: usize,
-    max_nodes: usize,
-    feat: usize,
-    adj_norm: AdjNorm,
 }
 
 impl<'a> MalnetTask<'a> {
@@ -94,14 +96,54 @@ impl<'a> MalnetTask<'a> {
                 }
             }
         }
+        // prepared fills are built from the FINAL segmentation (the
+        // FullGraph repack above may have replaced entries of `segs`)
+        let prepared = data
+            .graphs
+            .iter()
+            .zip(&segs)
+            .map(|(g, sg)| {
+                PreparedSegments::new(g, sg, m.adj_norm, max, m.feat)
+            })
+            .collect();
+        let fill_cache = FillCache::new(
+            cfg.fill_cache_mb,
+            max * m.feat,
+            max * max,
+            max,
+        );
         Ok(MalnetTask {
             data,
             segs,
+            prepared,
+            fill_cache,
             batch: m.batch,
-            max_nodes: m.max_nodes,
-            feat: m.feat,
-            adj_norm: m.adj_norm,
         })
+    }
+
+    /// The single fill path every site routes through: serve `(g, seg)`
+    /// from the fill-block cache when present, else run the prepared
+    /// fill (and populate the cache). Both produce output bit-identical
+    /// to `fill_padded`, so the cache budget never changes training.
+    fn fill_one(
+        &self,
+        g: usize,
+        seg: usize,
+        nodes: &mut [f32],
+        adj: &mut [f32],
+        mask: &mut [f32],
+    ) {
+        // graphs and segments both stay far below 2^24 at repo scale
+        let key = ((g as u64) << 24) | seg as u64;
+        if let Some(cache) = &self.fill_cache {
+            if cache.get(key, nodes, adj, mask) {
+                return;
+            }
+            self.prepared[g].fill(seg, None, nodes, adj, mask);
+            cache.put(key, nodes, adj, mask);
+        } else {
+            self.prepared[g].fill(seg, None, nodes, adj, mask);
+        }
     }
 
     /// Fresh embeddings for a list of (graph, segment) pairs, batched
@@ -122,9 +164,8 @@ impl<'a> MalnetTask<'a> {
         for chunk in pairs.chunks(b) {
             for slot in 0..b {
                 let (g, s) = chunk[super::core::padded_index(slot, chunk.len())];
-                self.segs[g].fill_padded(
-                    &self.data.graphs[g], s, m.adj_norm, n, f,
-                    None,
+                self.fill_one(
+                    g, s,
                     &mut nodes[slot * n * f..(slot + 1) * n * f],
                     &mut adj[slot * n * n..(slot + 1) * n * n],
                     &mut mask[slot * n..(slot + 1) * n],
@@ -204,8 +245,8 @@ impl<'a> MalnetTask<'a> {
         let mut mask = vec![0f32; jm * n];
         let mut seg_mask = vec![0f32; jm];
         for s in 0..j {
-            self.segs[g].fill_padded(
-                &self.data.graphs[g], s, m.adj_norm, n, f, None,
+            self.fill_one(
+                g, s,
                 &mut nodes[s * n * f..(s + 1) * n * f],
                 &mut adj[s * n * n..(s + 1) * n * n],
                 &mut mask[s * n..(s + 1) * n],
@@ -289,10 +330,7 @@ impl GstTask for MalnetTask<'_> {
         mask: &mut [f32],
     ) {
         let g = ctx[slot];
-        self.segs[g].fill_padded(
-            &self.data.graphs[g], seg, self.adj_norm, self.max_nodes,
-            self.feat, None, nodes, adj, mask,
-        );
+        self.fill_one(g, seg, nodes, adj, mask);
     }
 
     fn eval_metric(
@@ -316,6 +354,13 @@ impl GstTask for MalnetTask<'_> {
         self.segs.iter().map(|s| s.num_segments()).sum()
     }
 
+    fn fill_cache_stats(&self) -> CacheStats {
+        self.fill_cache
+            .as_ref()
+            .map(|c| c.stats())
+            .unwrap_or_default()
+    }
+
     // -- Full Graph Training baseline ---------------------------------------
 
     fn full_graph_epoch(&mut self, env: &mut CoreEnv<'_>) -> Result<()> {
@@ -328,13 +373,13 @@ impl GstTask for MalnetTask<'_> {
                 break;
             }
             env.timer.start();
-            let mut sets = Vec::with_capacity(chunk.len());
             for &g in chunk {
-                sets.push(self.full_step_one(env.eng, env.ps, g)?.grads);
+                let out = self.full_step_one(env.eng, env.ps, g)?;
+                env.accum.add(&out.grads);
             }
-            let avg = ops::average_grads(&sets);
             let lr = env.lr();
-            ops::apply(env.eng, env.ps, &avg, lr)?;
+            let avg = env.accum.mean();
+            ops::apply(env.eng, env.ps, avg, lr)?;
             env.timer.stop();
             *env.step += 1;
         }

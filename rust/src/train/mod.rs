@@ -142,6 +142,11 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// Override the manifest's learning rate (None = manifest value).
     pub lr: Option<f32>,
+    /// Byte budget (MiB) for the padded fill-block cache serving the
+    /// hottest segments' (nodes, adj, mask) tensors. Like `workers`, a
+    /// pure execution knob: served blocks are bit-identical to fresh
+    /// fills, so trained parameters never depend on it. 0 disables.
+    pub fill_cache_mb: usize,
 }
 
 impl Default for TrainConfig {
@@ -158,6 +163,7 @@ impl Default for TrainConfig {
             partition: Algorithm::MetisLike,
             eval_every: 5,
             lr: None,
+            fill_cache_mb: 0,
         }
     }
 }
@@ -172,6 +178,10 @@ pub struct RunResult {
     pub curve: crate::metrics::Curve,
     /// total embed_fwd/grad_step/... invocations (runtime accounting)
     pub call_counts: std::collections::HashMap<String, usize>,
+    /// padded fill-block cache counters (zero when `fill_cache_mb = 0`)
+    pub fill_cache: crate::metrics::CacheStats,
+    /// engine parameter-literal cache counters
+    pub param_cache: crate::metrics::CacheStats,
 }
 
 #[cfg(test)]

@@ -62,11 +62,11 @@ pub struct StepOut {
     pub h_s: Vec<f32>,
 }
 
-fn params_in(ps: &ParamStore) -> Vec<HostArg<'_>> {
-    ps.values.iter().map(|v| HostArg::F32(v)).collect()
-}
-
 /// `embed_fwd` over one packed batch; returns [B, table_dim].
+///
+/// Parameter inputs ride the engine's literal cache
+/// ([`Engine::call_with_params`]): the dozens of calls between two
+/// optimizer applies marshal the parameter set once.
 pub fn embed_fwd(
     eng: &Engine,
     ps: &ParamStore,
@@ -74,30 +74,32 @@ pub fn embed_fwd(
     adj: &[f32],
     mask: &[f32],
 ) -> Result<Vec<f32>> {
-    let mut inputs = params_in(ps);
-    inputs.push(HostArg::F32(nodes));
-    inputs.push(HostArg::F32(adj));
-    inputs.push(HostArg::F32(mask));
-    let out = eng.call_ref("embed_fwd", &inputs)?;
+    let rest = [
+        HostArg::F32(nodes),
+        HostArg::F32(adj),
+        HostArg::F32(mask),
+    ];
+    let out = eng.call_with_params("embed_fwd", ps, &rest)?;
     Ok(out[0].f32s().to_vec())
 }
 
 /// One GST gradient step over a packed batch.
 pub fn grad_step(eng: &Engine, ps: &ParamStore, bufs: &BatchBufs) -> Result<StepOut> {
     let np = eng.manifest.params.len();
-    let mut inputs = params_in(ps);
-    inputs.push(HostArg::F32(&bufs.nodes));
-    inputs.push(HostArg::F32(&bufs.adj));
-    inputs.push(HostArg::F32(&bufs.mask));
-    inputs.push(HostArg::F32(&bufs.stale));
-    inputs.push(HostArg::F32(&bufs.eta));
-    inputs.push(HostArg::F32(&bufs.invj));
+    let mut rest = vec![
+        HostArg::F32(&bufs.nodes),
+        HostArg::F32(&bufs.adj),
+        HostArg::F32(&bufs.mask),
+        HostArg::F32(&bufs.stale),
+        HostArg::F32(&bufs.eta),
+        HostArg::F32(&bufs.invj),
+    ];
     if eng.manifest.dataset == "malnet" {
-        inputs.push(HostArg::S32(&bufs.labels));
+        rest.push(HostArg::S32(&bufs.labels));
     } else {
-        inputs.push(HostArg::F32(&bufs.pair));
+        rest.push(HostArg::F32(&bufs.pair));
     }
-    let out = eng.call_ref("grad_step", &inputs)?;
+    let out = eng.call_with_params("grad_step", ps, &rest)?;
     Ok(StepOut {
         loss: out[0].f32s()[0],
         grads: out[1..1 + np].iter().map(|t| t.f32s().to_vec()).collect(),
@@ -117,13 +119,14 @@ pub fn full_step(
 ) -> Result<StepOut> {
     let np = eng.manifest.params.len();
     let label_buf = [label];
-    let mut inputs = params_in(ps);
-    inputs.push(HostArg::F32(nodes));
-    inputs.push(HostArg::F32(adj));
-    inputs.push(HostArg::F32(mask));
-    inputs.push(HostArg::F32(seg_mask));
-    inputs.push(HostArg::S32(&label_buf));
-    let out = eng.call_ref("full_step", &inputs)?;
+    let rest = [
+        HostArg::F32(nodes),
+        HostArg::F32(adj),
+        HostArg::F32(mask),
+        HostArg::F32(seg_mask),
+        HostArg::S32(&label_buf),
+    ];
+    let out = eng.call_with_params("full_step", ps, &rest)?;
     Ok(StepOut {
         loss: out[0].f32s()[0],
         grads: out[1..1 + np].iter().map(|t| t.f32s().to_vec()).collect(),
@@ -155,18 +158,20 @@ pub fn apply_named(
     ps.t += 1;
     let t_buf = [ps.t as f32];
     let lr_buf = [lr];
-    let mut inputs = params_in(ps);
-    inputs.extend(ps.m.iter().map(|x| HostArg::F32(x)));
-    inputs.extend(ps.v.iter().map(|x| HostArg::F32(x)));
-    inputs.extend(grads.iter().map(|g| HostArg::F32(g)));
-    inputs.push(HostArg::F32(&t_buf));
-    inputs.push(HostArg::F32(&lr_buf));
-    let out = eng.call_ref(fname, &inputs)?;
+    let mut rest: Vec<HostArg> = Vec::with_capacity(3 * np + 2);
+    rest.extend(ps.m.iter().map(|x| HostArg::F32(x)));
+    rest.extend(ps.v.iter().map(|x| HostArg::F32(x)));
+    rest.extend(grads.iter().map(|g| HostArg::F32(g)));
+    rest.push(HostArg::F32(&t_buf));
+    rest.push(HostArg::F32(&lr_buf));
+    let out = eng.call_with_params(fname, ps, &rest)?;
     for i in 0..np {
         ps.values[i].copy_from_slice(out[i].f32s());
         ps.m[i].copy_from_slice(out[np + i].f32s());
         ps.v[i].copy_from_slice(out[2 * np + i].f32s());
     }
+    // values changed: invalidate the engine's parameter-literal cache
+    ps.touch();
     Ok(())
 }
 
@@ -177,10 +182,8 @@ pub fn head_grad_step(
     h_graph: &[f32],
     labels: &[i32],
 ) -> Result<(f32, Vec<Vec<f32>>)> {
-    let mut inputs = params_in(head);
-    inputs.push(HostArg::F32(h_graph));
-    inputs.push(HostArg::S32(labels));
-    let out = eng.call_ref("head_grad_step", &inputs)?;
+    let rest = [HostArg::F32(h_graph), HostArg::S32(labels)];
+    let out = eng.call_with_params("head_grad_step", head, &rest)?;
     Ok((
         out[0].f32s()[0],
         out[1..].iter().map(|t| t.f32s().to_vec()).collect(),
@@ -203,42 +206,89 @@ pub fn predict(
     Ok(out[0].f32s().to_vec())
 }
 
-/// Elementwise-average a list of gradient sets (data-parallel reduction).
-pub fn average_grads(sets: &[Vec<Vec<f32>>]) -> Vec<Vec<f32>> {
-    assert!(!sets.is_empty());
-    let mut out = sets[0].clone();
-    for set in &sets[1..] {
-        for (acc, g) in out.iter_mut().zip(set) {
-            for (a, &x) in acc.iter_mut().zip(g) {
-                *a += x;
+/// In-place data-parallel gradient reduction. One instance lives for the
+/// whole run (owned by `GstCore`), so the per-group clone-then-add of the
+/// old `average_grads` becomes add-into-preallocated.
+///
+/// Usage per optimizer group: `add` each result's gradient set in plan
+/// order, then `mean` to finalize and borrow the averaged set. `mean`
+/// resets the accumulator for the next group. The k=1 path copies without
+/// dividing, so a single-set group reproduces its input bit-for-bit
+/// (the old `average_grads` divided by 1.0, also an identity).
+pub struct GradAccum {
+    acc: Vec<Vec<f32>>,
+    count: usize,
+}
+
+impl GradAccum {
+    /// Buffers sized from the manifest's parameter list.
+    pub fn new(m: &Manifest) -> GradAccum {
+        GradAccum {
+            acc: m.params.iter().map(|p| vec![0f32; p.elems()]).collect(),
+            count: 0,
+        }
+    }
+
+    /// Accumulate one gradient set. The first set of a group overwrites
+    /// (no zeroing pass needed); later sets add elementwise.
+    pub fn add(&mut self, set: &[Vec<f32>]) {
+        assert_eq!(set.len(), self.acc.len());
+        if self.count == 0 {
+            for (a, g) in self.acc.iter_mut().zip(set) {
+                a.copy_from_slice(g);
+            }
+        } else {
+            for (a, g) in self.acc.iter_mut().zip(set) {
+                for (x, &y) in a.iter_mut().zip(g) {
+                    *x += y;
+                }
             }
         }
+        self.count += 1;
     }
-    let k = sets.len() as f32;
-    for g in &mut out {
-        for a in g {
-            *a /= k;
+
+    /// Finalize the mean in place and borrow it; resets for reuse.
+    pub fn mean(&mut self) -> &[Vec<f32>] {
+        assert!(self.count > 0, "mean of empty GradAccum");
+        if self.count > 1 {
+            let k = self.count as f32;
+            for g in &mut self.acc {
+                for x in g {
+                    *x /= k;
+                }
+            }
         }
+        self.count = 0;
+        &self.acc
     }
-    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::manifest::tests_support::tiny_manifest;
 
     #[test]
-    fn average_grads_is_mean() {
-        let a = vec![vec![1.0f32, 2.0], vec![10.0]];
-        let b = vec![vec![3.0f32, 6.0], vec![20.0]];
-        let avg = average_grads(&[a, b]);
-        assert_eq!(avg[0], vec![2.0, 4.0]);
-        assert_eq!(avg[1], vec![15.0]);
+    fn grad_accum_is_mean() {
+        let m = tiny_manifest(); // params: a (4 elems), head_b (2 elems)
+        let mut acc = GradAccum::new(&m);
+        acc.add(&[vec![1.0, 2.0, 0.0, 0.0], vec![10.0, 0.0]]);
+        acc.add(&[vec![3.0, 6.0, 0.0, 0.0], vec![20.0, 0.0]]);
+        let avg = acc.mean();
+        assert_eq!(avg[0], vec![2.0, 4.0, 0.0, 0.0]);
+        assert_eq!(avg[1], vec![15.0, 0.0]);
     }
 
     #[test]
-    fn average_single_is_identity() {
-        let a = vec![vec![1.5f32]];
-        assert_eq!(average_grads(&[a.clone()]), a);
+    fn grad_accum_single_is_identity_and_reusable() {
+        let m = tiny_manifest();
+        let mut acc = GradAccum::new(&m);
+        let a = vec![vec![1.5f32, 0.0, 0.0, 0.0], vec![0.5, 0.25]];
+        acc.add(&a);
+        assert_eq!(acc.mean(), &a[..]);
+        // mean() reset the accumulator: the next group starts fresh
+        let b = vec![vec![7.0f32, 0.0, 0.0, 0.0], vec![1.0, 2.0]];
+        acc.add(&b);
+        assert_eq!(acc.mean(), &b[..]);
     }
 }

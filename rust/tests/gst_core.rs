@@ -56,6 +56,40 @@ fn workers_1_and_4_produce_identical_parameters_malnet() {
 }
 
 #[test]
+fn fill_cache_budget_never_changes_parameters() {
+    let Some(d) = dir("malnet_sage_n128") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let eng = Engine::open(&d).unwrap();
+    let data = MalnetDataset::generate(MalnetSplit::Tiny, 40, 3);
+    // fill_cache_mb is execution-only, exactly like workers: a cached
+    // fill block is bit-identical to a fresh fill, so any budget (and
+    // any worker count on top) trains the same parameters
+    let run = |fill_cache_mb: usize, workers: usize| {
+        let mut c = cfg(Method::GstED, workers);
+        c.fill_cache_mb = fill_cache_mb;
+        let mut tr = MalnetTrainer::new(&eng, &data, c).unwrap();
+        let res = tr.train().unwrap();
+        (tr.ps.values.clone(), tr.ps.m.clone(), res)
+    };
+    let (p0, m0, r0) = run(0, 1);
+    let (p1, m1, r1) = run(64, 1);
+    let (p4, m4, r4) = run(64, 4);
+    assert_eq!(p0, p1, "parameters diverge with fill cache budget");
+    assert_eq!(m0, m1, "Adam moments diverge with fill cache budget");
+    assert_eq!(p0, p4, "parameters diverge with cache + workers");
+    assert_eq!(m0, m4, "Adam moments diverge with cache + workers");
+    assert_eq!(r0.test_metric, r1.test_metric);
+    assert_eq!(r0.test_metric, r4.test_metric);
+    // the disabled run reports no cache traffic; the budgeted runs hit
+    assert_eq!(r0.fill_cache.total(), 0);
+    assert!(r1.fill_cache.hits > 0, "expected fill-cache hits");
+    // every run serves parameter literals from the engine cache
+    assert!(r1.param_cache.hits > 0, "expected param-literal hits");
+}
+
+#[test]
 fn workers_1_and_4_produce_identical_parameters_tpu() {
     let Some(d) = dir("tpu_sage_n128") else {
         eprintln!("skipping: tpu artifacts not built");
