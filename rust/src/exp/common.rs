@@ -7,6 +7,7 @@ use crate::train::{MalnetTrainer, Method, RunResult, TrainConfig, TpuTrainer};
 use crate::util::json::Json;
 use crate::util::stats;
 use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 
 /// Experiment sizing. `quick` is used by the e2e test and smoke runs;
@@ -56,6 +57,10 @@ pub struct Env {
     pub artifacts: String,
     pub out_dir: String,
     pub profile: Profile,
+    /// labeled `gst-run-report/v1` documents collected by
+    /// [`run_malnet`]/[`run_tpu`] during the current experiment; the
+    /// dispatcher flushes them to `<out>/<id>.reports.json`
+    pub reports: RefCell<Vec<Json>>,
 }
 
 impl Env {
@@ -66,7 +71,16 @@ impl Env {
             artifacts: artifacts.to_string(),
             out_dir: out_dir.to_string(),
             profile: if quick { Profile::quick() } else { Profile::full() },
+            reports: RefCell::new(Vec::new()),
         })
+    }
+
+    /// Collect one labeled run report (see [`run_malnet`]/[`run_tpu`]).
+    pub fn push_report(&self, label: &str, res: &RunResult) {
+        self.reports.borrow_mut().push(Json::obj(vec![
+            ("label", Json::str(label)),
+            ("report", res.report.clone()),
+        ]));
     }
 
     pub fn engine(&self, variant: &str) -> Result<Engine> {
@@ -184,23 +198,34 @@ pub fn print_table(
 }
 
 /// One MalNet training run under a method, returning the RunResult
-/// (errors containing "OOM" become Cell::oom upstream).
+/// (errors containing "OOM" become Cell::oom upstream). Recording is
+/// forced on so the run's report lands in `env.reports` under `label`.
 pub fn run_malnet(
+    env: &Env,
     eng: &Engine,
     data: &MalnetDataset,
-    cfg: TrainConfig,
+    mut cfg: TrainConfig,
+    label: &str,
 ) -> Result<RunResult> {
+    cfg.obs.record = true;
     let mut tr = MalnetTrainer::new(eng, data, cfg)?;
-    tr.train()
+    let res = tr.train()?;
+    env.push_report(label, &res);
+    Ok(res)
 }
 
 pub fn run_tpu(
+    env: &Env,
     eng: &Engine,
     data: &TpuDataset,
-    cfg: TrainConfig,
+    mut cfg: TrainConfig,
+    label: &str,
 ) -> Result<RunResult> {
+    cfg.obs.record = true;
     let mut tr = TpuTrainer::new(eng, data, cfg)?;
-    tr.train()
+    let res = tr.train()?;
+    env.push_report(label, &res);
+    Ok(res)
 }
 
 /// Method sets used by the paper's tables.

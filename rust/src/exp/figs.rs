@@ -37,7 +37,8 @@ pub fn fig2(env: &Env) -> Result<()> {
     let data = env.malnet(MalnetSplit::Large, 0);
     let cfg = curve_cfg(env, Method::GstEFD, 0);
     let finetune_at = cfg.epochs;
-    let res = run_malnet(&eng, &data, cfg)?;
+    let res =
+        run_malnet(env, &eng, &data, cfg, "gst+efd/sage/malnet-large")?;
     println!("\n=== Figure 2: GST+EFD curve, finetune starts at epoch {finetune_at} ===");
     print_curve("GST+EFD (SAGE, malnet-large)", &res.curve);
     let path = env.save(
@@ -63,7 +64,8 @@ pub fn fig3(env: &Env) -> Result<()> {
             let mut cfg = curve_cfg(env, Method::GstEFD, seed);
             cfg.keep_p = p;
             cfg.eval_every = cfg.epochs;
-            let res = run_malnet(&eng, &data, cfg)?;
+            let label = format!("p={p}/seed{seed}");
+            let res = run_malnet(env, &eng, &data, cfg, &label)?;
             vals.push(res.test_metric);
         }
         series.push((p, vals));
@@ -102,7 +104,8 @@ pub fn fig4(env: &Env) -> Result<()> {
             let data = env.malnet(MalnetSplit::Large, seed);
             let mut cfg = curve_cfg(env, Method::GstEFD, seed);
             cfg.eval_every = cfg.epochs;
-            let res = run_malnet(&eng, &data, cfg)?;
+            let label = format!("maxseg{n}/seed{seed}");
+            let res = run_malnet(env, &eng, &data, cfg, &label)?;
             vals.push(res.test_metric);
         }
         series.push((n, vals));
@@ -141,7 +144,7 @@ pub fn fig5(env: &Env) -> Result<()> {
     for method in methods {
         let mut cfg = curve_cfg(env, method, 0);
         cfg.epochs = env.profile.tpu_epochs;
-        let res = run_tpu(&eng, &data, cfg)?;
+        let res = run_tpu(env, &eng, &data, cfg, method.name())?;
         print_curve(method.name(), &res.curve);
         out.push((method.name().to_string(), res.curve));
     }
@@ -168,7 +171,13 @@ pub fn fig6(env: &Env) -> Result<()> {
     let mut out = Vec::new();
     println!("\n=== Figure 6: accuracy curves on MalNet-Tiny (SAGE) ===");
     for method in methods {
-        match run_malnet(&eng, &data, curve_cfg(env, method, 0)) {
+        match run_malnet(
+            env,
+            &eng,
+            &data,
+            curve_cfg(env, method, 0),
+            method.name(),
+        ) {
             Ok(res) => {
                 print_curve(method.name(), &res.curve);
                 out.push((method.name().to_string(), res.curve));

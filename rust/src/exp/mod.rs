@@ -6,7 +6,8 @@ pub mod figs;
 pub mod scaling;
 pub mod tables;
 
-use anyhow::{bail, Result};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
 use common::Env;
 
 pub const ALL_IDS: [&str; 11] = [
@@ -14,8 +15,11 @@ pub const ALL_IDS: [&str; 11] = [
     "fig4", "fig5", "fig6", "scaling",
 ];
 
-/// Run one experiment by id.
+/// Run one experiment by id. Every training run inside it records a
+/// `gst-run-report/v1` document; the batch is written alongside the
+/// experiment record as `<out>/<id>.reports.json`.
 pub fn run(id: &str, env: &Env) -> Result<()> {
+    env.reports.borrow_mut().clear();
     match id {
         "table1" => tables::table1(env),
         "table2" => tables::table2(env),
@@ -29,5 +33,12 @@ pub fn run(id: &str, env: &Env) -> Result<()> {
         "fig6" => figs::fig6(env),
         "scaling" => scaling::scaling(env),
         other => bail!("unknown experiment `{other}`; known: {ALL_IDS:?}"),
+    }?;
+    let reports = std::mem::take(&mut *env.reports.borrow_mut());
+    if !reports.is_empty() {
+        let path = format!("{}/{id}.reports.json", env.out_dir);
+        std::fs::write(&path, Json::arr(reports).to_string())
+            .with_context(|| format!("write {path}"))?;
     }
+    Ok(())
 }

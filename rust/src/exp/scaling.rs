@@ -32,7 +32,8 @@ pub fn scaling(env: &Env) -> Result<()> {
             micro_batches: MICRO_BATCHES,
             ..TrainConfig::default()
         };
-        let res = run_malnet(&eng, &data, cfg)?;
+        let label = format!("workers{workers}");
+        let res = run_malnet(env, &eng, &data, cfg, &label)?;
         metrics.push(res.test_metric);
         rows.push((workers, res.step_ms, res.test_metric));
     }

@@ -34,12 +34,17 @@ pub fn table1(env: &Env) -> Result<()> {
                 for method in table1_methods() {
                     let key =
                         format!("{}/{backbone}/{}", split.name(), method.name());
-                    let cell = cells.entry(key).or_default();
+                    let cell = cells.entry(key.clone()).or_default();
                     if cell.note.is_some() {
                         continue;
                     }
-                    match run_malnet(&eng, &data, base_cfg(env, method, seed))
-                    {
+                    match run_malnet(
+                        env,
+                        &eng,
+                        &data,
+                        base_cfg(env, method, seed),
+                        &key,
+                    ) {
                         Ok(res) => cell.push(res.test_metric),
                         Err(e) if e.to_string().contains("OOM") => {
                             *cell = Cell::oom();
@@ -94,7 +99,8 @@ pub fn table2(env: &Env) -> Result<()> {
             if cells.get(&tr_key).map(|c| c.note.is_some()).unwrap_or(false) {
                 continue;
             }
-            match run_tpu(&eng, &data, cfg) {
+            let label = format!("{}/seed{seed}", method.name());
+            match run_tpu(env, &eng, &data, cfg, &label) {
                 Ok(res) => {
                     cells.entry(tr_key).or_default().push(res.train_metric);
                     cells.entry(te_key).or_default().push(res.test_metric);
@@ -146,7 +152,7 @@ pub fn table3(env: &Env) -> Result<()> {
             cfg.finetune_epochs = 0;
             cfg.eval_every = 99;
             let key = format!("{backbone}/{}", method.name());
-            match run_malnet(&eng, &data, cfg) {
+            match run_malnet(env, &eng, &data, cfg, &key) {
                 Ok(res) => cells.entry(key).or_default().push(res.step_ms),
                 Err(e) if e.to_string().contains("OOM") => {
                     cells.insert(key, Cell::oom());
@@ -237,11 +243,9 @@ pub fn table6(env: &Env) -> Result<()> {
             for (name, alg) in algs {
                 let mut cfg = base_cfg(env, Method::GstEFD, seed);
                 cfg.partition = alg;
-                let res = run_malnet(&eng, &data, cfg)?;
-                cells
-                    .entry(format!("{name}/{}", split.name()))
-                    .or_default()
-                    .push(res.test_metric);
+                let key = format!("{name}/{}", split.name());
+                let res = run_malnet(env, &eng, &data, cfg, &key)?;
+                cells.entry(key).or_default().push(res.test_metric);
             }
         }
     }

@@ -21,6 +21,7 @@
 //! * [`train`] — the GST trainer: Full/GST/GST-One/+E/+EF/+ED/+EFD
 //! * [`memory`] — analytic V100-16GB activation-memory model (OOM rows)
 //! * [`metrics`] — accuracy, OPA, loss curves, timers
+//! * [`obs`] — phase-scoped recorder, trace sinks, run reports
 //! * [`exp`] — one driver per paper table/figure
 //! * [`testing`] — property-testing framework used by the test suite
 
@@ -29,6 +30,7 @@ pub mod exp;
 pub mod graph;
 pub mod memory;
 pub mod metrics;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod sed;

@@ -7,7 +7,7 @@
 //!   partition    partition quality report across algorithms
 //!   memory       paper-scale memory model report (the OOM boundary)
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use gst::datasets::{MalnetDataset, MalnetSplit, TpuDataset};
 use gst::exp::{self, common::Env};
 use gst::graph::GraphStats;
@@ -52,7 +52,8 @@ fn usage() -> String {
          \x20 experiment --id <{}|all> [--quick] [--artifacts DIR] [--out DIR]\n\
          \x20 train --dataset <malnet-tiny|malnet-large|tpu> --method <full|gst|gst-one|gst+e|gst+ef|gst+ed|gst+efd>\n\
          \x20       [--backbone gcn|sage|gps] [--epochs N] [--keep-p P] [--partition ALG] [--seed S]\n\
-         \x20       [--micro-batches M] [--workers W] [--fill-cache-mb MB]\n\
+         \x20       [--micro-batches M] [--workers W] [--fill-cache-mb MB] [--curve]\n\
+         \x20       [--report-json FILE] [--trace-out FILE] [--log-every N]\n\
          \x20 data-stats [--graphs N]\n\
          \x20 partition [--alg ALG] [--max-size N]\n\
          \x20 memory",
@@ -108,10 +109,18 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("artifacts", Some("artifacts"), "AOT artifact root")
         .opt("max-nodes", Some("128"), "segment size variant (32|64|128|256)")
         .opt("lr", None, "override learning rate")
+        .opt("report-json", None, "write the machine-readable run report")
+        .opt("trace-out", None, "stream JSONL span/point events to FILE")
+        .opt("log-every", Some("0"), "heartbeat every N steps (0 = off)")
         .switch("curve", "print the per-epoch accuracy curve");
     let args = cli.parse(argv).map_err(|e| anyhow!(e))?;
     let method = Method::parse(args.get("method").unwrap())
         .ok_or_else(|| anyhow!("bad --method"))?;
+    let obs = gst::obs::ObsConfig {
+        record: args.get("report-json").is_some(),
+        trace_out: args.get("trace-out").map(|s| s.to_string()),
+        log_every: args.get_usize("log-every").map_err(|e| anyhow!(e))?,
+    };
     let cfg = TrainConfig {
         method,
         epochs: args.get_usize("epochs").map_err(|e| anyhow!(e))?,
@@ -132,23 +141,20 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         fill_cache_mb: args
             .get_usize("fill-cache-mb")
             .map_err(|e| anyhow!(e))?,
+        obs,
     };
     let count = args.get_usize("graphs").map_err(|e| anyhow!(e))?;
     let root = args.get("artifacts").unwrap();
     let nmax = args.get_usize("max-nodes").map_err(|e| anyhow!(e))?;
     let dataset = args.get("dataset").unwrap();
-    match dataset {
+    let (metric, res) = match dataset {
         "tpu" => {
             let eng = gst::runtime::Engine::open(&format!(
                 "{root}/tpu_sage_n{nmax}"
             ))?;
             let data = TpuDataset::generate(count, 8, cfg.seed + 2000);
             let mut tr = TpuTrainer::new(&eng, &data, cfg)?;
-            let res = tr.train()?;
-            println!(
-                "method={} train_opa={:.4} test_opa={:.4} step_ms={:.1}",
-                method.name(), res.train_metric, res.test_metric, res.step_ms
-            );
+            ("opa", tr.train()?)
         }
         split @ ("malnet-tiny" | "malnet-large") => {
             let backbone = args.get("backbone").unwrap();
@@ -162,41 +168,66 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             };
             let data = MalnetDataset::generate(split, count, cfg.seed + 1000);
             let mut tr = MalnetTrainer::new(&eng, &data, cfg)?;
-            let res = tr.train()?;
-            if args.get_bool("curve") {
-                for i in 0..res.curve.epochs.len() {
-                    println!("epoch {:>4}  train {:.4}  test {:.4}",
-                             res.curve.epochs[i], res.curve.train[i],
-                             res.curve.test[i]);
-                }
-            }
-            println!(
-                "method={} train_acc={:.4} test_acc={:.4} step_ms={:.1}",
-                method.name(), res.train_metric, res.test_metric, res.step_ms
-            );
-            let mut counts: Vec<_> = res.call_counts.iter().collect();
-            counts.sort();
-            for (k, v) in counts {
-                println!("  calls {k}: {v}");
-            }
-            if res.fill_cache.total() > 0 {
-                println!(
-                    "  fill-cache hits: {}/{} ({:.1}%)",
-                    res.fill_cache.hits,
-                    res.fill_cache.total(),
-                    100.0 * res.fill_cache.hit_rate()
-                );
-            }
-            println!(
-                "  param-literal cache hits: {}/{} ({:.1}%)",
-                res.param_cache.hits,
-                res.param_cache.total(),
-                100.0 * res.param_cache.hit_rate()
-            );
+            ("acc", tr.train()?)
         }
         other => bail!("unknown dataset `{other}`"),
+    };
+    print_run_summary(metric, method, &res, args.get_bool("curve"));
+    if let Some(path) = args.get("report-json") {
+        std::fs::write(path, res.report.to_string())
+            .with_context(|| format!("writing report {path}"))?;
+        println!("  report written to {path}");
     }
     Ok(())
+}
+
+/// One summary printer for every dataset arm (identical output shape
+/// whether the run ranked TPU configs or classified malnet graphs).
+fn print_run_summary(
+    metric: &str,
+    method: Method,
+    res: &gst::train::RunResult,
+    curve: bool,
+) {
+    if curve {
+        for i in 0..res.curve.epochs.len() {
+            println!(
+                "epoch {:>4}  train {:.4}  test {:.4}",
+                res.curve.epochs[i], res.curve.train[i], res.curve.test[i]
+            );
+        }
+    }
+    println!(
+        "method={} train_{metric}={:.4} test_{metric}={:.4} \
+         step_ms={:.1} p95_ms={:.1} max_ms={:.1}",
+        method.name(),
+        res.train_metric,
+        res.test_metric,
+        res.step_ms,
+        res.step_p95_ms,
+        res.step_max_ms
+    );
+    let mut counts: Vec<_> = res.call_counts.iter().collect();
+    counts.sort();
+    for (k, v) in counts {
+        println!("  calls {k}: {v}");
+    }
+    if res.fill_cache.total() > 0 {
+        println!(
+            "  fill-cache hits: {}/{} ({:.1}%)",
+            res.fill_cache.hits,
+            res.fill_cache.total(),
+            100.0 * res.fill_cache.hit_rate()
+        );
+    }
+    if res.param_cache.total() > 0 {
+        println!(
+            "  param-literal cache hits: {}/{} ({:.1}%)",
+            res.param_cache.hits,
+            res.param_cache.total(),
+            100.0 * res.param_cache.hit_rate()
+        );
+    }
 }
 
 fn cmd_data_stats(argv: &[String]) -> Result<()> {

@@ -47,6 +47,16 @@ impl MemoryModel {
         }
     }
 
+    /// Model for a dataset name as spelled in `TrainConfig`/manifests
+    /// (`"tpu"` vs the MalNet splits) — the telemetry entry point.
+    pub fn for_dataset(dataset: &str, backbone: &str) -> MemoryModel {
+        if dataset == "tpu" {
+            MemoryModel::tpu_paper()
+        } else {
+            MemoryModel::malnet_paper(backbone)
+        }
+    }
+
     /// TpuGraphs configuration: hidden 128, 4 mp + 3 post layers.
     pub fn tpu_paper() -> MemoryModel {
         MemoryModel {
@@ -134,6 +144,14 @@ mod tests {
         // invariant: doesn't depend on any full-graph quantity — same
         // value whatever dataset it's asked about
         assert_eq!(p, m.gst_peak_bytes(16, 1, 5_000, 20_000));
+    }
+
+    #[test]
+    fn for_dataset_dispatches_on_name() {
+        let t = MemoryModel::for_dataset("tpu", "sage");
+        assert_eq!(t.hidden, MemoryModel::tpu_paper().hidden);
+        let m = MemoryModel::for_dataset("malnet-tiny", "gps");
+        assert_eq!(m.hidden, MemoryModel::malnet_paper("gps").hidden);
     }
 
     #[test]

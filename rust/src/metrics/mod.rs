@@ -104,6 +104,15 @@ impl CacheStats {
             self.hits as f64 / self.total() as f64
         }
     }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("hits", Json::num(self.hits as f64)),
+            ("misses", Json::num(self.misses as f64)),
+            ("hit_rate", Json::num(self.hit_rate())),
+        ])
+    }
 }
 
 /// Accumulates per-epoch points for the Figure 2/5/6 curves.
@@ -190,6 +199,20 @@ impl StepTimer {
 
     pub fn p50_ms(&self) -> f64 {
         crate::util::stats::percentile(&self.samples_ms, 50.0)
+    }
+
+    /// 95th-percentile sample — the tail that a Table 3 mean hides.
+    pub fn p95_ms(&self) -> f64 {
+        crate::util::stats::percentile(&self.samples_ms, 95.0)
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        crate::util::stats::max(&self.samples_ms)
+    }
+
+    /// Most recent sample (0.0 before the first), for heartbeat lines.
+    pub fn last_ms(&self) -> f64 {
+        self.samples_ms.last().copied().unwrap_or(0.0)
     }
 
     pub fn count(&self) -> usize {
@@ -279,6 +302,22 @@ mod tests {
     }
 
     #[test]
+    fn timer_tail_stats() {
+        let t = StepTimer::default();
+        assert_eq!(t.p95_ms(), 0.0);
+        assert_eq!(t.max_ms(), 0.0);
+        assert_eq!(t.last_ms(), 0.0);
+        let mut t = StepTimer::default();
+        for _ in 0..10 {
+            t.start();
+            t.stop();
+        }
+        assert!(t.max_ms() >= t.p95_ms());
+        assert!(t.p95_ms() >= t.p50_ms());
+        assert!(t.last_ms() >= 0.0);
+    }
+
+    #[test]
     fn cache_stats_rates() {
         let s = CacheStats::default();
         assert_eq!(s.total(), 0);
@@ -286,6 +325,9 @@ mod tests {
         let s = CacheStats { hits: 3, misses: 1 };
         assert_eq!(s.total(), 4);
         assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.at("hits").as_f64(), Some(3.0));
+        assert!((j.at("hit_rate").as_f64().unwrap() - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! Fixed-bucket histogram for staleness and latency distributions.
+
+use crate::util::json::Json;
+
+/// Fixed-bucket histogram: `edges` are strictly-ascending **inclusive**
+/// upper bounds; the counts vector carries one extra overflow bucket at
+/// the end, so `counts.len() == edges.len() + 1`.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    edges: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    pub fn new(edges: Vec<f64>) -> Histogram {
+        assert!(
+            edges.windows(2).all(|w| w[0] < w[1]),
+            "histogram edges must be strictly ascending"
+        );
+        let n = edges.len() + 1;
+        Histogram {
+            edges,
+            counts: vec![0; n],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Power-of-two staleness buckets in optimizer steps:
+    /// ≤0, ≤1, ≤2, ≤4, …, ≤4096, then overflow.
+    pub fn staleness() -> Histogram {
+        let mut edges = vec![0.0];
+        let mut e = 1.0;
+        while e <= 4096.0 {
+            edges.push(e);
+            e *= 2.0;
+        }
+        Histogram::new(edges)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let i = self.edges.partition_point(|&e| e < v);
+        self.counts[i] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "edges",
+                Json::arr(self.edges.iter().map(|&e| Json::num(e))),
+            ),
+            (
+                "counts",
+                Json::arr(
+                    self.counts.iter().map(|&c| Json::num(c as f64)),
+                ),
+            ),
+            ("count", Json::num(self.total as f64)),
+            ("mean", Json::num(self.mean())),
+            ("max", Json::num(self.max())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_use_inclusive_upper_bounds() {
+        let mut h = Histogram::new(vec![1.0, 2.0, 4.0]);
+        h.observe(0.5); // -> bucket 0
+        h.observe(1.0); // inclusive upper bound -> bucket 0
+        h.observe(1.5); // -> bucket 1
+        h.observe(4.0); // -> bucket 2
+        h.observe(9.0); // -> overflow
+        assert_eq!(h.counts(), &[2, 1, 1, 1]);
+        assert_eq!(h.count(), 5);
+        assert!((h.mean() - 16.0 / 5.0).abs() < 1e-12);
+        assert_eq!(h.min(), 0.5);
+        assert_eq!(h.max(), 9.0);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeroes() {
+        let h = Histogram::new(vec![1.0]);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.to_json().at("count").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn staleness_buckets_cover_powers_of_two() {
+        let h = Histogram::staleness();
+        // edges 0, 1, 2, 4, ..., 4096 -> 14 edges, 15 buckets
+        let j = h.to_json();
+        assert_eq!(j.at("edges").as_arr().unwrap().len(), 14);
+        assert_eq!(j.at("counts").as_arr().unwrap().len(), 15);
+        let mut h = h;
+        h.observe(3.0);
+        h.observe(5000.0);
+        // 3 lands in the ≤4 bucket (index 3), 5000 overflows
+        assert_eq!(h.counts()[3], 1);
+        assert_eq!(h.counts()[14], 1);
+    }
+}

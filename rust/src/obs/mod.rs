@@ -1,0 +1,432 @@
+//! Observability layer: phase-scoped spans, a counter/gauge registry,
+//! staleness telemetry, a JSONL trace sink and machine-readable run
+//! reports (DESIGN.md §8).
+//!
+//! Everything here is **execution-only**: the [`Recorder`] never feeds
+//! back into training, and when no sink is configured (`record` off, no
+//! trace file, no heartbeat) every telemetry method is a cheap no-op, so
+//! trained parameters are bit-identical with observability on or off
+//! (pinned by `tests/gst_core.rs`).
+//!
+//! One exception is deliberate: the per-step wall-clock timer is always
+//! on, because `RunResult.step_ms` is a core output of every run
+//! (Table 3), not an opt-in diagnostic.
+
+pub mod hist;
+mod report;
+mod sink;
+
+pub use hist::Histogram;
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::metrics::StepTimer;
+use crate::util::json::Json;
+use anyhow::Result;
+use sink::TraceSink;
+
+/// Sink configuration carried inside `TrainConfig` (all off by default,
+/// which makes the recorder a no-op).
+#[derive(Clone, Debug, Default)]
+pub struct ObsConfig {
+    /// Collect phase/staleness/cache telemetry for the run report even
+    /// without a trace file (`--report-json` sets this).
+    pub record: bool,
+    /// JSONL trace-event stream path (`--trace-out`).
+    pub trace_out: Option<String>,
+    /// Print a heartbeat line to stderr every N optimizer steps
+    /// (`--log-every`; 0 = off).
+    pub log_every: usize,
+}
+
+/// The fixed phase taxonomy spans are attributed to. `Step` is the outer
+/// span wrapping one optimizer step; the rest are its leaves (plus the
+/// out-of-step `Eval` and `Finetune` phases).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Step,
+    Sample,
+    Fill,
+    EmbedFwd,
+    Grad,
+    TableCommit,
+    Eval,
+    Finetune,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 8] = [
+        Phase::Step,
+        Phase::Sample,
+        Phase::Fill,
+        Phase::EmbedFwd,
+        Phase::Grad,
+        Phase::TableCommit,
+        Phase::Eval,
+        Phase::Finetune,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Step => "step",
+            Phase::Sample => "sample",
+            Phase::Fill => "fill",
+            Phase::EmbedFwd => "embed_fwd",
+            Phase::Grad => "grad",
+            Phase::TableCommit => "table_commit",
+            Phase::Eval => "eval",
+            Phase::Finetune => "finetune",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Per-epoch staleness snapshot sampled from the embedding table after
+/// each training epoch.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    /// 1-based epoch index (matches `Curve.epochs`).
+    pub epoch: usize,
+    /// Fraction of table rows ever written.
+    pub coverage: f64,
+    /// Mean staleness over written rows, in optimizer steps.
+    pub mean_staleness: f64,
+    /// Staleness distribution over written rows.
+    pub hist: Histogram,
+}
+
+thread_local! {
+    /// Span nesting depth on this thread (worker threads start at 0).
+    static DEPTH: Cell<u32> = Cell::new(0);
+}
+
+/// Run-wide telemetry hub. All methods take `&self` (interior
+/// mutability) and the type is `Sync`, so one recorder is shared by the
+/// sequential plan/commit path and the parallel compute workers alike.
+pub struct Recorder {
+    enabled: bool,
+    t0: Instant,
+    log_every: u64,
+    cur_step: AtomicU64,
+    phase_ns: [AtomicU64; 8],
+    phase_calls: [AtomicU64; 8],
+    steps: Mutex<StepTimer>,
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    epochs: Mutex<Vec<EpochStats>>,
+    sink: Option<TraceSink>,
+}
+
+impl Recorder {
+    /// Recorder with every optional sink off (step timing still runs).
+    pub fn disabled() -> Recorder {
+        Recorder::build(false, 0, None)
+    }
+
+    /// Build from the run's [`ObsConfig`]; opening the trace file is the
+    /// only fallible part.
+    pub fn new(cfg: &ObsConfig) -> Result<Recorder> {
+        let sink = match &cfg.trace_out {
+            Some(path) => Some(TraceSink::create(path)?),
+            None => None,
+        };
+        let enabled = cfg.record || sink.is_some() || cfg.log_every > 0;
+        Ok(Recorder::build(enabled, cfg.log_every as u64, sink))
+    }
+
+    fn build(
+        enabled: bool,
+        log_every: u64,
+        sink: Option<TraceSink>,
+    ) -> Recorder {
+        Recorder {
+            enabled,
+            t0: Instant::now(),
+            log_every,
+            cur_step: AtomicU64::new(0),
+            phase_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            phase_calls: std::array::from_fn(|_| AtomicU64::new(0)),
+            steps: Mutex::new(StepTimer::default()),
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            epochs: Mutex::new(Vec::new()),
+            sink,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    // -- step wall-clock (always on: RunResult.step_ms is a core output)
+
+    pub fn step_start(&self) {
+        self.steps.lock().unwrap().start();
+    }
+
+    /// Close the current step sample; prints the heartbeat line when
+    /// `--log-every` is set.
+    pub fn step_stop(&self) {
+        let (recorded, count, last_ms, mean_ms) = {
+            let mut t = self.steps.lock().unwrap();
+            let before = t.count();
+            t.stop();
+            (t.count() > before, t.count(), t.last_ms(), t.mean_ms())
+        };
+        if !recorded {
+            return; // paused section (finetune): nothing was sampled
+        }
+        if self.log_every > 0 && count as u64 % self.log_every == 0 {
+            eprintln!(
+                "[obs] step={count} last_ms={last_ms:.2} \
+                 mean_ms={mean_ms:.2}"
+            );
+        }
+    }
+
+    /// Enter an untimed section (the +F finetuning phase, which the
+    /// paper's per-iteration numbers exclude).
+    pub fn pause_steps(&self) {
+        self.steps.lock().unwrap().pause();
+    }
+
+    /// Leave the untimed section.
+    pub fn resume_steps(&self) {
+        self.steps.lock().unwrap().resume();
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.steps.lock().unwrap().count()
+    }
+
+    pub fn step_mean_ms_from(&self, skip: usize) -> f64 {
+        self.steps.lock().unwrap().mean_ms_from(skip)
+    }
+
+    pub fn step_p50_ms(&self) -> f64 {
+        self.steps.lock().unwrap().p50_ms()
+    }
+
+    pub fn step_p95_ms(&self) -> f64 {
+        self.steps.lock().unwrap().p95_ms()
+    }
+
+    pub fn step_max_ms(&self) -> f64 {
+        self.steps.lock().unwrap().max_ms()
+    }
+
+    // -- spans, counters, gauges, points (no-ops when disabled) --
+
+    /// Tag subsequent trace events with the current optimizer-step index.
+    pub fn set_step(&self, step: u64) {
+        if self.enabled {
+            self.cur_step.store(step, Ordering::Relaxed);
+        }
+    }
+
+    /// RAII phase timer; returns an inert guard when disabled. Guards
+    /// nest: each carries the depth at which it was opened.
+    pub fn span(&self, phase: Phase) -> Span<'_> {
+        if !self.enabled {
+            return Span { inner: None };
+        }
+        let depth = DEPTH.with(|d| {
+            let v = d.get();
+            d.set(v + 1);
+            v
+        });
+        Span {
+            inner: Some(SpanInner {
+                rec: self,
+                phase,
+                start: Instant::now(),
+                depth,
+            }),
+        }
+    }
+
+    /// Add to a named counter.
+    pub fn add(&self, name: &str, n: u64) {
+        if self.enabled && n > 0 {
+            *self
+                .counters
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_insert(0) += n;
+        }
+    }
+
+    /// Read a counter back (0 when absent or disabled).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a named gauge to its latest value.
+    pub fn gauge(&self, name: &str, value: f64) {
+        if self.enabled {
+            self.gauges.lock().unwrap().insert(name.to_string(), value);
+        }
+    }
+
+    /// Record one epoch's staleness snapshot (also emitted as a trace
+    /// point when a sink is attached).
+    pub fn record_epoch(&self, stats: EpochStats) {
+        if !self.enabled {
+            return;
+        }
+        self.point(
+            "epoch_staleness",
+            Json::obj(vec![
+                ("epoch", Json::num(stats.epoch as f64)),
+                ("coverage", Json::num(stats.coverage)),
+                ("mean", Json::num(stats.mean_staleness)),
+            ]),
+        );
+        self.epochs.lock().unwrap().push(stats);
+    }
+
+    /// Emit a named point event to the trace sink, if any.
+    pub fn point(&self, name: &str, data: Json) {
+        let Some(sink) = &self.sink else { return };
+        sink.write(&Json::obj(vec![
+            ("ev", Json::str("point")),
+            ("name", Json::str(name)),
+            ("t_us", Json::num(self.t_us())),
+            ("data", data),
+        ]));
+    }
+
+    /// Flush the trace sink (end of run).
+    pub fn flush(&self) {
+        if let Some(sink) = &self.sink {
+            sink.flush();
+        }
+    }
+
+    fn t_us(&self) -> f64 {
+        self.t0.elapsed().as_micros() as f64
+    }
+}
+
+/// RAII guard from [`Recorder::span`]: measures wall-clock from creation
+/// to drop and attributes it to the span's phase.
+pub struct Span<'a> {
+    inner: Option<SpanInner<'a>>,
+}
+
+struct SpanInner<'a> {
+    rec: &'a Recorder,
+    phase: Phase,
+    start: Instant,
+    depth: u32,
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        let Some(s) = self.inner.take() else { return };
+        DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        let ns = s.start.elapsed().as_nanos() as u64;
+        let i = s.phase.idx();
+        s.rec.phase_ns[i].fetch_add(ns, Ordering::Relaxed);
+        s.rec.phase_calls[i].fetch_add(1, Ordering::Relaxed);
+        if let Some(sink) = &s.rec.sink {
+            let step = s.rec.cur_step.load(Ordering::Relaxed);
+            let t_us =
+                s.start.duration_since(s.rec.t0).as_micros() as f64;
+            sink.write(&Json::obj(vec![
+                ("ev", Json::str("span")),
+                ("phase", Json::str(s.phase.name())),
+                ("step", Json::num(step as f64)),
+                ("t_us", Json::num(t_us)),
+                ("dur_us", Json::num(ns as f64 / 1e3)),
+                ("depth", Json::num(s.depth as f64)),
+            ]));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_is_send_and_sync() {
+        fn assert_sync<T: Send + Sync>() {}
+        assert_sync::<Recorder>();
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let r = Recorder::disabled();
+        assert!(!r.is_enabled());
+        {
+            let _outer = r.span(Phase::Step);
+            let _inner = r.span(Phase::Fill);
+        }
+        r.add("x", 3);
+        r.gauge("g", 1.0);
+        assert_eq!(r.counter("x"), 0);
+        let j = r.phases_json();
+        for p in Phase::ALL {
+            assert_eq!(j.at(p.name()).at("calls").as_f64(), Some(0.0));
+        }
+        // ...but the step timer still runs (step_ms is a core output)
+        r.step_start();
+        r.step_stop();
+        assert_eq!(r.step_count(), 1);
+    }
+
+    #[test]
+    fn spans_nest_and_accumulate() {
+        let r = Recorder::new(&ObsConfig {
+            record: true,
+            ..ObsConfig::default()
+        })
+        .unwrap();
+        {
+            let _step = r.span(Phase::Step);
+            {
+                let _fill = r.span(Phase::Fill);
+                std::hint::black_box((0..10_000).sum::<u64>());
+            }
+            {
+                let _grad = r.span(Phase::Grad);
+            }
+        }
+        let j = r.phases_json();
+        assert_eq!(j.at("step").at("calls").as_f64(), Some(1.0));
+        assert_eq!(j.at("fill").at("calls").as_f64(), Some(1.0));
+        assert_eq!(j.at("grad").at("calls").as_f64(), Some(1.0));
+        let step_ms = j.at("step").at("total_ms").as_f64().unwrap();
+        let fill_ms = j.at("fill").at("total_ms").as_f64().unwrap();
+        let grad_ms = j.at("grad").at("total_ms").as_f64().unwrap();
+        // the outer span covers both inner ones
+        assert!(step_ms >= fill_ms + grad_ms);
+    }
+
+    #[test]
+    fn counters_and_gauges_accumulate_when_enabled() {
+        let r = Recorder::new(&ObsConfig {
+            record: true,
+            ..ObsConfig::default()
+        })
+        .unwrap();
+        r.add("sed_stale_total", 2);
+        r.add("sed_stale_total", 3);
+        r.add("zero", 0);
+        r.gauge("mem", 1.5);
+        r.gauge("mem", 2.5);
+        assert_eq!(r.counter("sed_stale_total"), 5);
+        assert_eq!(r.counter("zero"), 0);
+        let g = r.gauges_json();
+        assert_eq!(g.at("mem").as_f64(), Some(2.5));
+    }
+}

@@ -1,0 +1,185 @@
+//! Report-side serialization for [`Recorder`] — a child module so it can
+//! read the recorder's internals without widening its public surface.
+//! The full `gst-run-report/v1` document is assembled by the trainer
+//! (`train::core`), which owns the run-level context (config, metrics,
+//! engine stats) the recorder has no business knowing about.
+
+use std::sync::atomic::Ordering;
+
+use super::{Phase, Recorder};
+use crate::util::json::Json;
+
+impl Recorder {
+    /// Per-phase `{total_ms, calls}`; every phase key is always present
+    /// so report consumers never need existence checks. With parallel
+    /// workers the compute-phase totals are summed across threads and
+    /// may legitimately exceed wall-clock.
+    pub fn phases_json(&self) -> Json {
+        Json::Obj(
+            Phase::ALL
+                .iter()
+                .map(|&p| {
+                    let i = p.idx();
+                    let ns = self.phase_ns[i].load(Ordering::Relaxed);
+                    let calls =
+                        self.phase_calls[i].load(Ordering::Relaxed);
+                    (
+                        p.name().to_string(),
+                        Json::obj(vec![
+                            ("total_ms", Json::num(ns as f64 / 1e6)),
+                            ("calls", Json::num(calls as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// Per-epoch staleness snapshots, in recording order.
+    pub fn staleness_json(&self) -> Json {
+        Json::arr(self.epochs.lock().unwrap().iter().map(|e| {
+            Json::obj(vec![
+                ("epoch", Json::num(e.epoch as f64)),
+                ("coverage", Json::num(e.coverage)),
+                ("mean", Json::num(e.mean_staleness)),
+                ("hist", e.hist.to_json()),
+            ])
+        }))
+    }
+
+    /// SED drop accounting from the plan-loop counters (Eq. 1: a stale
+    /// slot is "dropped" when its Bernoulli η is 0).
+    pub fn sed_json(&self) -> Json {
+        let total = self.counter("sed_stale_total");
+        let dropped = self.counter("sed_stale_dropped");
+        let rate = if total == 0 {
+            0.0
+        } else {
+            dropped as f64 / total as f64
+        };
+        Json::obj(vec![
+            ("stale_total", Json::num(total as f64)),
+            ("stale_dropped", Json::num(dropped as f64)),
+            ("drop_rate", Json::num(rate)),
+        ])
+    }
+
+    pub fn counters_json(&self) -> Json {
+        Json::Obj(
+            self.counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::num(v as f64)))
+                .collect(),
+        )
+    }
+
+    pub fn gauges_json(&self) -> Json {
+        Json::Obj(
+            self.gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::num(v)))
+                .collect(),
+        )
+    }
+
+    /// Step wall-clock stats; the first `warmup` samples are excluded
+    /// from the steady-state mean (Table 3 skips the cold first epoch).
+    pub fn steps_json(&self, warmup: usize) -> Json {
+        let t = self.steps.lock().unwrap();
+        Json::obj(vec![
+            ("count", Json::num(t.count() as f64)),
+            ("warmup_steps", Json::num(warmup as f64)),
+            ("mean_ms", Json::num(t.mean_ms())),
+            ("steady_mean_ms", Json::num(t.mean_ms_from(warmup))),
+            ("p50_ms", Json::num(t.p50_ms())),
+            ("p95_ms", Json::num(t.p95_ms())),
+            ("max_ms", Json::num(t.max_ms())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{
+        EpochStats, Histogram, ObsConfig, Phase, Recorder,
+    };
+
+    fn recording() -> Recorder {
+        Recorder::new(&ObsConfig {
+            record: true,
+            ..ObsConfig::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn phases_json_lists_every_phase() {
+        let r = recording();
+        drop(r.span(Phase::Sample));
+        let j = r.phases_json();
+        assert_eq!(j.as_obj().unwrap().len(), Phase::ALL.len());
+        assert_eq!(j.at("sample").at("calls").as_f64(), Some(1.0));
+        assert_eq!(j.at("finetune").at("calls").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn sed_json_rates() {
+        let r = recording();
+        r.add("sed_stale_total", 10);
+        r.add("sed_stale_dropped", 4);
+        let j = r.sed_json();
+        assert_eq!(j.at("stale_total").as_f64(), Some(10.0));
+        assert_eq!(j.at("stale_dropped").as_f64(), Some(4.0));
+        let rate = j.at("drop_rate").as_f64().unwrap();
+        assert!((rate - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sed_json_defaults_to_zero_without_counters() {
+        let j = recording().sed_json();
+        assert_eq!(j.at("stale_total").as_f64(), Some(0.0));
+        assert_eq!(j.at("drop_rate").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn staleness_json_orders_epochs() {
+        let r = recording();
+        for epoch in 1usize..=2 {
+            let mut h = Histogram::staleness();
+            h.observe(epoch as f64);
+            r.record_epoch(EpochStats {
+                epoch,
+                coverage: 0.5,
+                mean_staleness: epoch as f64,
+                hist: h,
+            });
+        }
+        let j = r.staleness_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].at("epoch").as_f64(), Some(1.0));
+        assert_eq!(arr[1].at("epoch").as_f64(), Some(2.0));
+        assert_eq!(arr[1].at("hist").at("count").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn steps_json_includes_tail_stats() {
+        let r = recording();
+        for _ in 0..4 {
+            r.step_start();
+            r.step_stop();
+        }
+        let j = r.steps_json(1);
+        assert_eq!(j.at("count").as_f64(), Some(4.0));
+        assert_eq!(j.at("warmup_steps").as_f64(), Some(1.0));
+        assert!(j.at("p95_ms").as_f64().unwrap() >= 0.0);
+        assert!(
+            j.at("max_ms").as_f64().unwrap()
+                >= j.at("p50_ms").as_f64().unwrap()
+        );
+    }
+}

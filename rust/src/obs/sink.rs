@@ -1,0 +1,87 @@
+//! JSONL trace sink (`--trace-out`): one event object per line.
+//!
+//! Two event shapes, both flat enough to grep:
+//!
+//! ```text
+//! {"depth":0,"dur_us":412,"ev":"span","phase":"fill","step":3,"t_us":..}
+//! {"data":{...},"ev":"point","name":"epoch_staleness","t_us":..}
+//! ```
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Buffered line-per-event writer shared across worker threads.
+pub struct TraceSink {
+    w: Mutex<BufWriter<File>>,
+}
+
+impl TraceSink {
+    pub fn create(path: &str) -> Result<TraceSink> {
+        let f = File::create(path)
+            .with_context(|| format!("creating trace file {path}"))?;
+        Ok(TraceSink { w: Mutex::new(BufWriter::new(f)) })
+    }
+
+    /// Append one event; I/O errors are swallowed — tracing must never
+    /// fail a run.
+    pub fn write(&self, ev: &Json) {
+        let line = ev.to_string();
+        let mut w = self.w.lock().unwrap();
+        let _ = writeln!(w, "{line}");
+    }
+
+    pub fn flush(&self) {
+        let _ = self.w.lock().unwrap().flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ObsConfig, Phase, Recorder};
+    use crate::util::json::Json;
+
+    #[test]
+    fn jsonl_events_have_the_documented_shape() {
+        let path = std::env::temp_dir()
+            .join(format!("gst_obs_sink_{}.jsonl", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let r = Recorder::new(&ObsConfig {
+            trace_out: Some(path.clone()),
+            ..ObsConfig::default()
+        })
+        .unwrap();
+        r.set_step(7);
+        {
+            let _outer = r.span(Phase::Step);
+            let _inner = r.span(Phase::Fill);
+        }
+        r.point(
+            "epoch_staleness",
+            Json::obj(vec![("epoch", Json::num(1.0))]),
+        );
+        r.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let events: Vec<Json> =
+            text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(events.len(), 3);
+        // guards drop in reverse declaration order: fill closes first
+        assert_eq!(events[0].at("ev").as_str(), Some("span"));
+        assert_eq!(events[0].at("phase").as_str(), Some("fill"));
+        assert_eq!(events[0].at("step").as_f64(), Some(7.0));
+        assert_eq!(events[0].at("depth").as_f64(), Some(1.0));
+        assert_eq!(events[1].at("phase").as_str(), Some("step"));
+        assert_eq!(events[1].at("depth").as_f64(), Some(0.0));
+        assert!(events[1].at("dur_us").as_f64().unwrap() >= 0.0);
+        assert_eq!(events[2].at("ev").as_str(), Some("point"));
+        assert_eq!(
+            events[2].at("name").as_str(),
+            Some("epoch_staleness")
+        );
+        assert_eq!(events[2].at("data").at("epoch").as_f64(), Some(1.0));
+    }
+}

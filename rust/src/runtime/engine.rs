@@ -26,6 +26,7 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
 
 /// A host-side tensor heading into (or out of) an executable.
 #[derive(Clone, Debug)]
@@ -95,14 +96,26 @@ impl<'a> From<&'a HostTensor> for HostArg<'a> {
 /// Parameter-literal cache entry: (store generation, shared literal set).
 type ParamLitEntry = (u64, Arc<Vec<xla::Literal>>);
 
+/// Per-function execution accounting: invocation count and cumulative
+/// wall-clock (execute + output unmarshal) in nanoseconds.
+#[derive(Clone, Copy, Debug, Default)]
+struct CallStat {
+    count: usize,
+    ns: u64,
+}
+
 /// Executable cache for one artifact variant.
 pub struct Engine {
     pub manifest: Manifest,
     dir: String,
     client: xla::PjRtClient,
     exes: RwLock<HashMap<String, xla::PjRtLoadedExecutable>>,
-    /// cumulative executions per function (observability + perf accounting)
-    calls: Mutex<HashMap<String, usize>>,
+    /// cumulative executions + wall-clock per function (observability
+    /// and perf accounting)
+    calls: Mutex<HashMap<String, CallStat>>,
+    /// cumulative bytes marshalled into input literals (positional
+    /// inputs + parameter-literal rebuilds)
+    marshal_bytes: AtomicU64,
     /// marshalled parameter literals per store id, tagged with the store
     /// generation they were built from
     param_lits: RwLock<HashMap<u64, ParamLitEntry>>,
@@ -122,6 +135,7 @@ impl Engine {
             client,
             exes: RwLock::new(HashMap::new()),
             calls: Mutex::new(HashMap::new()),
+            marshal_bytes: AtomicU64::new(0),
             param_lits: RwLock::new(HashMap::new()),
             param_hits: AtomicU64::new(0),
             param_misses: AtomicU64::new(0),
@@ -179,6 +193,8 @@ impl Engine {
                 spec.inputs.len()
             );
         }
+        let bytes: usize = inputs.iter().map(|t| t.len() * 4).sum();
+        self.marshal_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         let mut literals = Vec::with_capacity(inputs.len());
         for (t, ispec) in inputs.iter().zip(&spec.inputs) {
             literals.push(marshal(name, ispec, t)?);
@@ -208,6 +224,8 @@ impl Engine {
             );
         }
         let params = self.param_literals(name, spec, ps)?;
+        let bytes: usize = rest.iter().map(|t| t.len() * 4).sum();
+        self.marshal_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         let mut tail = Vec::with_capacity(rest.len());
         for (t, ispec) in rest.iter().zip(&spec.inputs[np..]) {
             tail.push(marshal(name, ispec, t)?);
@@ -239,6 +257,8 @@ impl Engine {
             }
         }
         self.param_misses.fetch_add(1, Ordering::Relaxed);
+        let bytes: usize = ps.values.iter().map(|v| v.len() * 4).sum();
+        self.marshal_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         let mut lits = Vec::with_capacity(ps.values.len());
         for (v, ispec) in ps.values.iter().zip(&spec.inputs) {
             lits.push(marshal(name, ispec, &HostArg::F32(v))?);
@@ -251,20 +271,21 @@ impl Engine {
         Ok(lits)
     }
 
-    /// Shared execution tail: count the call, run the executable over
-    /// already-marshalled literals, unmarshal + validate the outputs.
+    /// Shared execution tail: count + time the call, run the executable
+    /// over already-marshalled literals, unmarshal + validate outputs.
     fn execute_marshalled(
         &self,
         name: &str,
         spec: &FnSpec,
         literals: &[&xla::Literal],
     ) -> Result<Vec<HostTensor>> {
-        *self
-            .calls
+        self.calls
             .lock()
             .expect("calls lock")
             .entry(name.to_string())
-            .or_insert(0) += 1;
+            .or_default()
+            .count += 1;
+        let t0 = Instant::now();
         let exes = self.exes.read().expect("exes lock");
         let exe = exes.get(name).expect("ensured above");
         let result = exe
@@ -306,12 +327,41 @@ impl Engine {
             }
             out.push(t);
         }
+        let ns = t0.elapsed().as_nanos() as u64;
+        self.calls
+            .lock()
+            .expect("calls lock")
+            .entry(name.to_string())
+            .or_default()
+            .ns += ns;
         Ok(out)
     }
 
     /// Per-function call counts since construction.
     pub fn call_counts(&self) -> HashMap<String, usize> {
-        self.calls.lock().expect("calls lock").clone()
+        self.calls
+            .lock()
+            .expect("calls lock")
+            .iter()
+            .map(|(k, s)| (k.clone(), s.count))
+            .collect()
+    }
+
+    /// Per-function cumulative wall-clock (execute + output unmarshal)
+    /// in milliseconds since construction.
+    pub fn call_ms(&self) -> HashMap<String, f64> {
+        self.calls
+            .lock()
+            .expect("calls lock")
+            .iter()
+            .map(|(k, s)| (k.clone(), s.ns as f64 / 1e6))
+            .collect()
+    }
+
+    /// Total bytes marshalled into input literals (positional inputs
+    /// plus parameter-literal cache rebuilds).
+    pub fn marshalled_bytes(&self) -> u64 {
+        self.marshal_bytes.load(Ordering::Relaxed)
     }
 
     /// Hit/miss counters of the parameter-literal cache.

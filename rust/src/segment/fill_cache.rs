@@ -163,6 +163,11 @@ impl FillCache {
         self.len() == 0
     }
 
+    /// Bytes currently held by resident blocks (telemetry gauge).
+    pub fn bytes(&self) -> usize {
+        self.len() * self.block() * 4
+    }
+
     /// Cumulative hit/miss counters.
     pub fn stats(&self) -> CacheStats {
         let inner = self.inner.lock().expect("fill cache lock");
@@ -196,6 +201,8 @@ mod tests {
         assert_eq!(m, [1.0, 0.0]);
         let s = c.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
+        // one resident (2 + 4 + 2)-float block
+        assert_eq!(c.bytes(), 32);
     }
 
     #[test]

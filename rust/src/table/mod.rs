@@ -93,17 +93,25 @@ impl EmbeddingTable {
         written as f64 / self.version.len() as f64
     }
 
-    /// Mean staleness over written entries at `now` (0.0 when none),
-    /// computed streaming — no per-call age buffer.
+    /// Visit the age (at `now`) of every written entry — the telemetry
+    /// walk shared by [`EmbeddingTable::mean_staleness`] and the
+    /// per-epoch staleness histogram (no per-call age buffer).
+    pub fn for_each_staleness<F: FnMut(u32)>(&self, now: u32, mut f: F) {
+        for &v in &self.version {
+            if v != NEVER {
+                f(now - v);
+            }
+        }
+    }
+
+    /// Mean staleness over written entries at `now` (0.0 when none).
     pub fn mean_staleness(&self, now: u32) -> f64 {
         let mut sum = 0f64;
         let mut count = 0usize;
-        for &v in &self.version {
-            if v != NEVER {
-                sum += (now - v) as f64;
-                count += 1;
-            }
-        }
+        self.for_each_staleness(now, |age| {
+            sum += age as f64;
+            count += 1;
+        });
         if count == 0 {
             0.0
         } else {
@@ -171,6 +179,17 @@ mod tests {
         t.put(0, 0, &[0.0; 4], 0);
         t.put(1, 0, &[0.0; 4], 10);
         assert!((t.mean_staleness(20) - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn for_each_staleness_visits_only_written_entries() {
+        let mut t = table();
+        t.put(0, 0, &[0.0; 4], 0);
+        t.put(1, 0, &[0.0; 4], 10);
+        let mut ages = Vec::new();
+        t.for_each_staleness(20, |age| ages.push(age));
+        ages.sort_unstable();
+        assert_eq!(ages, vec![10, 20]);
     }
 
     #[test]

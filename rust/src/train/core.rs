@@ -33,13 +33,17 @@
 
 use super::ops::{self, BatchBufs, GradAccum};
 use super::{Method, RunResult, SedMode, TrainConfig};
-use crate::metrics::{CacheStats, Curve, StepTimer};
+use crate::memory::MemoryModel;
+use crate::metrics::{CacheStats, Curve};
+use crate::obs::{EpochStats, Histogram, Phase, Recorder};
 use crate::runtime::{Engine, ParamStore};
 use crate::sed;
 use crate::table::EmbeddingTable;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::util::threads;
 use anyhow::{bail, Result};
+use std::collections::HashMap;
 
 /// One micro-batch slot, described by the task during the plan phase.
 #[derive(Clone, Debug)]
@@ -62,7 +66,8 @@ pub struct CoreEnv<'e> {
     pub ps: &'e mut ParamStore,
     pub table: &'e mut EmbeddingTable,
     pub rng: &'e mut Pcg64,
-    pub timer: &'e mut StepTimer,
+    /// run-wide recorder (step timing, spans, counters — all `&self`)
+    pub obs: &'e Recorder,
     pub step: &'e mut u32,
     /// shared in-place gradient reducer (core-owned, reused every group)
     pub accum: &'e mut GradAccum,
@@ -163,6 +168,18 @@ pub trait GstTask: Sync {
         CacheStats::default()
     }
 
+    /// Bytes held by the task's precomputed fill structures (telemetry
+    /// gauge). Default: none.
+    fn prepared_bytes(&self) -> usize {
+        0
+    }
+
+    /// Bytes resident in the task's fill-block cache (telemetry gauge).
+    /// Default: no cache.
+    fn fill_cache_bytes(&self) -> usize {
+        0
+    }
+
     /// Full Graph Training baseline epoch. Default: unsupported (tasks
     /// whose constructor rejects `Method::FullGraph` never reach this).
     fn full_graph_epoch(&mut self, _env: &mut CoreEnv<'_>) -> Result<()> {
@@ -245,7 +262,8 @@ pub struct GstCore<'a, T: GstTask> {
     step: u32,
     /// optimization steps recorded during epoch 0 (cold-table warmup)
     first_epoch_steps: usize,
-    pub timer: StepTimer,
+    /// observability hub: always-on step timer + opt-in telemetry
+    pub obs: Recorder,
     /// one reusable buffer set per worker (embed staging + grad batch)
     bufs: Vec<BatchBufs>,
     /// in-place gradient reducer, reused across every optimizer group
@@ -272,8 +290,31 @@ impl<'a, T: GstTask> GstCore<'a, T> {
         let ps = ParamStore::load(eng.dir(), &eng.manifest)?;
         eng.warmup(&task.warmup_fns(cfg.method))?;
         let pool = cfg.workers.max(1).min(cfg.micro_batches.max(1));
-        let bufs = (0..pool).map(|_| BatchBufs::new(&eng.manifest)).collect();
+        let bufs: Vec<BatchBufs> =
+            (0..pool).map(|_| BatchBufs::new(&eng.manifest)).collect();
         let rng = Pcg64::new(cfg.seed, task.seed_tag());
+        let obs = Recorder::new(&cfg.obs)?;
+        if obs.is_enabled() {
+            let m = &eng.manifest;
+            let mm = MemoryModel::for_dataset(&m.dataset, &m.backbone);
+            // segment edge counts are not manifest data; 4 × nodes is
+            // the synthetic generators' average-degree envelope
+            let peak = mm.gst_peak_bytes(
+                m.batch,
+                cfg.s_per_graph,
+                m.max_nodes,
+                4 * m.max_nodes,
+            );
+            obs.gauge("memory_model_peak_bytes", peak as f64);
+            obs.gauge(
+                "prepared_fill_bytes",
+                task.prepared_bytes() as f64,
+            );
+            obs.gauge(
+                "batch_bufs_bytes",
+                bufs.iter().map(|b| b.bytes()).sum::<usize>() as f64,
+            );
+        }
         Ok(GstCore {
             task,
             eng,
@@ -283,7 +324,7 @@ impl<'a, T: GstTask> GstCore<'a, T> {
             rng,
             step: 0,
             first_epoch_steps: 0,
-            timer: StepTimer::default(),
+            obs,
             bufs,
             accum: GradAccum::new(&eng.manifest),
         })
@@ -313,7 +354,7 @@ impl<'a, T: GstTask> GstCore<'a, T> {
             ps,
             table,
             rng,
-            timer,
+            obs,
             step,
             accum,
             ..
@@ -326,7 +367,7 @@ impl<'a, T: GstTask> GstCore<'a, T> {
                 ps,
                 table,
                 rng,
-                timer,
+                obs: &*obs,
                 step,
                 accum,
             },
@@ -346,11 +387,13 @@ impl<'a, T: GstTask> GstCore<'a, T> {
                 self.gst_epoch(epoch)?;
             }
             if epoch == 0 {
-                self.first_epoch_steps = self.timer.count();
+                self.first_epoch_steps = self.obs.step_count();
             }
+            self.record_epoch_telemetry(epoch + 1);
             if (epoch + 1) % self.cfg.eval_every == 0
                 || epoch + 1 == self.cfg.epochs
             {
+                let _eval = self.obs.span(Phase::Eval);
                 let tr =
                     self.task.eval_metric(self.eng, &self.ps, &eval_train)?;
                 let te = self.task.eval_metric(
@@ -364,28 +407,164 @@ impl<'a, T: GstTask> GstCore<'a, T> {
         if self.cfg.method.finetunes() {
             // finetune steps are not part of the Table 3 per-iteration
             // time (the paper reports the main-loop fwd+bwd time)
-            self.timer.pause();
-            let (task, mut env) = self.split_env();
-            task.finetune(&mut env, &mut curve, &eval_train)?;
-            self.timer.resume();
+            self.obs.pause_steps();
+            {
+                let (task, mut env) = self.split_env();
+                let _ft = env.obs.span(Phase::Finetune);
+                task.finetune(&mut env, &mut curve, &eval_train)?;
+            }
+            self.obs.resume_steps();
         }
-        let train_metric =
-            self.task.eval_metric(self.eng, &self.ps, &eval_train)?;
-        let test_metric = self.task.eval_metric(
-            self.eng,
-            &self.ps,
-            self.task.test_items(),
-        )?;
+        let (train_metric, test_metric) = {
+            let _eval = self.obs.span(Phase::Eval);
+            let tr =
+                self.task.eval_metric(self.eng, &self.ps, &eval_train)?;
+            let te = self.task.eval_metric(
+                self.eng,
+                &self.ps,
+                self.task.test_items(),
+            )?;
+            (tr, te)
+        };
+        let call_counts = self.eng.call_counts();
+        let fill_cache = self.task.fill_cache_stats();
+        let param_cache = self.eng.param_cache_stats();
+        if self.obs.is_enabled() {
+            self.obs.gauge("table_bytes", self.table.bytes() as f64);
+            self.obs.gauge("table_coverage", self.table.coverage());
+            self.obs.gauge(
+                "fill_cache_bytes",
+                self.task.fill_cache_bytes() as f64,
+            );
+        }
+        let report = self.build_report(
+            train_metric,
+            test_metric,
+            &curve,
+            &call_counts,
+            fill_cache,
+            param_cache,
+        );
+        self.obs.flush();
         Ok(RunResult {
             train_metric,
             test_metric,
             // steady-state: exclude epoch 0's cold-table steps
-            step_ms: self.timer.mean_ms_from(self.first_epoch_steps),
+            step_ms: self.obs.step_mean_ms_from(self.first_epoch_steps),
+            step_p50_ms: self.obs.step_p50_ms(),
+            step_p95_ms: self.obs.step_p95_ms(),
+            step_max_ms: self.obs.step_max_ms(),
             curve,
-            call_counts: self.eng.call_counts(),
-            fill_cache: self.task.fill_cache_stats(),
-            param_cache: self.eng.param_cache_stats(),
+            call_counts,
+            fill_cache,
+            param_cache,
+            report,
         })
+    }
+
+    /// Sample table coverage + the staleness distribution into the epoch
+    /// telemetry (no-op when the recorder is disabled).
+    fn record_epoch_telemetry(&self, epoch: usize) {
+        if !self.obs.is_enabled() {
+            return;
+        }
+        let mut hist = Histogram::staleness();
+        self.table
+            .for_each_staleness(self.step, |age| hist.observe(age as f64));
+        self.obs.record_epoch(EpochStats {
+            epoch,
+            coverage: self.table.coverage(),
+            mean_staleness: self.table.mean_staleness(self.step),
+            hist,
+        });
+    }
+
+    /// Assemble the `gst-run-report/v1` document: run context plus every
+    /// recorder view plus engine-side accounting. Built for every run —
+    /// with the recorder disabled the telemetry sections are just empty.
+    fn build_report(
+        &self,
+        train_metric: f64,
+        test_metric: f64,
+        curve: &Curve,
+        call_counts: &HashMap<String, usize>,
+        fill_cache: CacheStats,
+        param_cache: CacheStats,
+    ) -> Json {
+        let m = &self.eng.manifest;
+        let cfg = &self.cfg;
+        let calls = Json::Obj(
+            call_counts
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::num(v as f64)))
+                .collect(),
+        );
+        let per_call_ms = Json::Obj(
+            self.eng
+                .call_ms()
+                .into_iter()
+                .map(|(k, v)| (k, Json::num(v)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::str("gst-run-report/v1")),
+            ("method", Json::str(cfg.method.name())),
+            ("dataset", Json::str(&m.dataset)),
+            ("backbone", Json::str(&m.backbone)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("epochs", Json::num(cfg.epochs as f64)),
+                    (
+                        "finetune_epochs",
+                        Json::num(cfg.finetune_epochs as f64),
+                    ),
+                    ("keep_p", Json::num(cfg.keep_p as f64)),
+                    ("workers", Json::num(cfg.workers as f64)),
+                    (
+                        "micro_batches",
+                        Json::num(cfg.micro_batches as f64),
+                    ),
+                    ("seed", Json::num(cfg.seed as f64)),
+                    (
+                        "fill_cache_mb",
+                        Json::num(cfg.fill_cache_mb as f64),
+                    ),
+                ]),
+            ),
+            (
+                "metrics",
+                Json::obj(vec![
+                    ("train", Json::num(train_metric)),
+                    ("test", Json::num(test_metric)),
+                ]),
+            ),
+            ("curve", curve.to_json()),
+            ("steps", self.obs.steps_json(self.first_epoch_steps)),
+            ("phases", self.obs.phases_json()),
+            ("staleness", self.obs.staleness_json()),
+            ("sed", self.obs.sed_json()),
+            (
+                "caches",
+                Json::obj(vec![
+                    ("fill", fill_cache.to_json()),
+                    ("param_literal", param_cache.to_json()),
+                ]),
+            ),
+            ("calls", calls),
+            (
+                "engine",
+                Json::obj(vec![
+                    ("per_call_ms", per_call_ms),
+                    (
+                        "marshalled_bytes",
+                        Json::num(self.eng.marshalled_bytes() as f64),
+                    ),
+                ]),
+            ),
+            ("gauges", self.obs.gauges_json()),
+            ("counters", self.obs.counters_json()),
+        ])
     }
 
     // -- the shared GST inner loop (Alg. 1/2) -------------------------------
@@ -408,64 +587,94 @@ impl<'a, T: GstTask> GstCore<'a, T> {
         let (b, td) = (m.batch, m.table_dim);
         let method = self.cfg.method;
         let mode = method.sed(self.cfg.keep_p);
-        self.timer.start();
+        self.obs.set_step(self.step as u64);
+        self.obs.step_start();
+        let _step_span = self.obs.span(Phase::Step);
 
         // 1. plan (sequential; table reads see the group-start snapshot)
         let mut plans: Vec<StepPlan<T::StepCtx>> =
             Vec::with_capacity(units.len());
-        for (k, unit) in units.iter().enumerate() {
-            let step_id = self.step + k as u32;
-            let mut rng = self.rng.stream(&format!("step{step_id}"));
-            let (ctx, slots) = self.task.begin_step(unit, &mut rng);
-            assert_eq!(slots.len(), b, "task must describe all B slots");
-            let mut plan = StepPlan {
-                ctx,
-                slots,
-                sampled: vec![0usize; b],
-                eta_fresh: vec![0.0f32; b],
-                stale: vec![0.0f32; b * td],
-                fresh: Vec::new(),
-                step_id,
-            };
-            for slot in 0..b {
-                let j = plan.slots[slot].num_segments;
-                let s = rng.below(j);
-                plan.sampled[slot] = s;
-                let w = sed_weights(mode, j, s, &mut rng);
-                plan.eta_fresh[slot] = w.eta_fresh;
-                let row = plan.slots[slot].row;
-                for (seg, &eta) in w.eta_stale.iter().enumerate() {
-                    if seg == s || eta == 0.0 {
-                        continue;
-                    }
-                    if !method.fresh_stale() {
-                        if let Some(h) = self.table.get(row, seg) {
-                            for d in 0..td {
-                                plan.stale[slot * td + d] += eta * h[d];
-                            }
+        let mut sed_total = 0u64;
+        let mut sed_dropped = 0u64;
+        {
+            let _sample = self.obs.span(Phase::Sample);
+            for (k, unit) in units.iter().enumerate() {
+                let step_id = self.step + k as u32;
+                let mut rng = self.rng.stream(&format!("step{step_id}"));
+                let (ctx, slots) = self.task.begin_step(unit, &mut rng);
+                assert_eq!(
+                    slots.len(),
+                    b,
+                    "task must describe all B slots"
+                );
+                let mut plan = StepPlan {
+                    ctx,
+                    slots,
+                    sampled: vec![0usize; b],
+                    eta_fresh: vec![0.0f32; b],
+                    stale: vec![0.0f32; b * td],
+                    fresh: Vec::new(),
+                    step_id,
+                };
+                for slot in 0..b {
+                    let j = plan.slots[slot].num_segments;
+                    let s = rng.below(j);
+                    plan.sampled[slot] = s;
+                    let w = sed_weights(mode, j, s, &mut rng);
+                    plan.eta_fresh[slot] = w.eta_fresh;
+                    let row = plan.slots[slot].row;
+                    for (seg, &eta) in w.eta_stale.iter().enumerate() {
+                        if seg == s {
                             continue;
                         }
-                        // else: cold entry (first epoch) — recompute
-                        // fresh AND write back, Alg. 2's first touch
+                        sed_total += 1;
+                        if eta == 0.0 {
+                            // SED dropped this stale segment (Eq. 1)
+                            sed_dropped += 1;
+                            continue;
+                        }
+                        if !method.fresh_stale() {
+                            if let Some(h) = self.table.get(row, seg) {
+                                for d in 0..td {
+                                    plan.stale[slot * td + d] +=
+                                        eta * h[d];
+                                }
+                                continue;
+                            }
+                            // else: cold entry (first epoch) — recompute
+                            // fresh AND write back, Alg. 2's first touch
+                        }
+                        plan.fresh.push((slot, seg, eta));
                     }
-                    plan.fresh.push((slot, seg, eta));
                 }
+                plans.push(plan);
             }
-            plans.push(plan);
         }
+        self.obs.add("sed_stale_total", sed_total);
+        self.obs.add("sed_stale_dropped", sed_dropped);
 
         // 2. compute (parallel): contiguous shards keep plan order
         let nworkers = self.bufs.len().min(plans.len()).max(1);
         let ranges = threads::chunk_ranges(plans.len(), nworkers);
         let task = &self.task;
         let ps = &self.ps;
+        let obs = &self.obs;
         let plans_ref = &plans;
         let ranges_ref = &ranges;
         let worker_out =
             threads::fork_join_with(&mut self.bufs[..nworkers], |w, wb| {
                 ranges_ref[w]
                     .clone()
-                    .map(|pi| compute_step(eng, task, ps, &plans_ref[pi], wb))
+                    .map(|pi| {
+                        compute_step(
+                            eng,
+                            task,
+                            ps,
+                            &plans_ref[pi],
+                            wb,
+                            obs,
+                        )
+                    })
                     .collect::<Result<Vec<StepResult>>>()
             });
         let mut results: Vec<StepResult> = Vec::with_capacity(plans.len());
@@ -474,18 +683,29 @@ impl<'a, T: GstTask> GstCore<'a, T> {
         }
 
         // 3. commit (sequential, micro-batch order — deterministic for
-        // any worker count)
-        for (plan, res) in plans.iter().zip(&results) {
-            commit_step(&mut self.table, method.uses_table(), plan, res, td);
+        // any worker count). The commit span also covers gradient
+        // reduction and the optimizer apply: everything serial after
+        // the workers join.
+        {
+            let _commit = self.obs.span(Phase::TableCommit);
+            for (plan, res) in plans.iter().zip(&results) {
+                commit_step(
+                    &mut self.table,
+                    method.uses_table(),
+                    plan,
+                    res,
+                    td,
+                );
+            }
+            for res in &results {
+                self.accum.add(&res.grads);
+            }
+            let lr = effective_lr(&self.cfg, eng);
+            let avg = self.accum.mean();
+            ops::apply(eng, &mut self.ps, avg, lr)?;
         }
-        for res in &results {
-            self.accum.add(&res.grads);
-        }
-        let lr = effective_lr(&self.cfg, eng);
-        let avg = self.accum.mean();
-        ops::apply(eng, &mut self.ps, avg, lr)?;
         self.step += plans.len() as u32;
-        self.timer.stop();
+        self.obs.step_stop();
         Ok(())
     }
 }
@@ -501,6 +721,7 @@ fn compute_step<T: GstTask>(
     ps: &ParamStore,
     plan: &StepPlan<T::StepCtx>,
     bufs: &mut BatchBufs,
+    obs: &Recorder,
 ) -> Result<StepResult> {
     let m = &eng.manifest;
     let (b, td) = (m.batch, m.table_dim);
@@ -509,12 +730,19 @@ fn compute_step<T: GstTask>(
     // fresh stale embeddings, batched through embed_fwd
     let mut fresh_embs: Vec<Vec<f32>> = Vec::with_capacity(plan.fresh.len());
     for chunk in plan.fresh.chunks(b) {
-        for bslot in 0..b {
-            let (slot, seg, _) = chunk[padded_index(bslot, chunk.len())];
-            let (nodes, adj, mask) = bufs.slot(m, bslot);
-            task.fill_slot(&plan.ctx, slot, seg, nodes, adj, mask);
+        {
+            let _fill = obs.span(Phase::Fill);
+            for bslot in 0..b {
+                let (slot, seg, _) =
+                    chunk[padded_index(bslot, chunk.len())];
+                let (nodes, adj, mask) = bufs.slot(m, bslot);
+                task.fill_slot(&plan.ctx, slot, seg, nodes, adj, mask);
+            }
         }
-        let h = ops::embed_fwd(eng, ps, &bufs.nodes, &bufs.adj, &bufs.mask)?;
+        let h = {
+            let _fwd = obs.span(Phase::EmbedFwd);
+            ops::embed_fwd(eng, ps, &bufs.nodes, &bufs.adj, &bufs.mask)?
+        };
         for (i, &(slot, _seg, eta)) in chunk.iter().enumerate() {
             let hv = &h[i * td..(i + 1) * td];
             for d in 0..td {
@@ -524,16 +752,29 @@ fn compute_step<T: GstTask>(
         }
     }
     // grad batch: sampled segments + SED weights + loss buffers
-    for slot in 0..b {
-        bufs.eta[slot] = plan.eta_fresh[slot];
-        bufs.invj[slot] = plan.slots[slot].invj;
-        let (nodes, adj, mask) = bufs.slot(m, slot);
-        task.fill_slot(&plan.ctx, slot, plan.sampled[slot], nodes, adj, mask);
+    {
+        let _fill = obs.span(Phase::Fill);
+        for slot in 0..b {
+            bufs.eta[slot] = plan.eta_fresh[slot];
+            bufs.invj[slot] = plan.slots[slot].invj;
+            let (nodes, adj, mask) = bufs.slot(m, slot);
+            task.fill_slot(
+                &plan.ctx,
+                slot,
+                plan.sampled[slot],
+                nodes,
+                adj,
+                mask,
+            );
+        }
+        // reused buffers: tasks only set the pair mask's 1-entries
+        bufs.pair.fill(0.0);
+        task.fill_loss(&plan.ctx, bufs);
     }
-    // reused buffers: tasks only set the pair mask's 1-entries
-    bufs.pair.fill(0.0);
-    task.fill_loss(&plan.ctx, bufs);
-    let out = ops::grad_step(eng, ps, bufs)?;
+    let out = {
+        let _grad = obs.span(Phase::Grad);
+        ops::grad_step(eng, ps, bufs)?
+    };
     Ok(StepResult { grads: out.grads, h_s: out.h_s, fresh_embs })
 }
 

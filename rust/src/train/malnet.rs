@@ -20,7 +20,7 @@ use anyhow::{bail, Result};
 
 /// The MalNet trainer is the shared core driving a [`MalnetTask`]; the
 /// public surface (`new` / `train` / `evaluate` / `total_segments` and the
-/// `ps` / `table` / `timer` / `cfg` fields) is unchanged from the
+/// `ps` / `table` / `obs` / `cfg` fields) is unchanged from the
 /// pre-refactor trainer.
 pub type MalnetTrainer<'a> = GstCore<'a, MalnetTask<'a>>;
 
@@ -361,6 +361,14 @@ impl GstTask for MalnetTask<'_> {
             .unwrap_or_default()
     }
 
+    fn prepared_bytes(&self) -> usize {
+        self.prepared.iter().map(|p| p.bytes()).sum()
+    }
+
+    fn fill_cache_bytes(&self) -> usize {
+        self.fill_cache.as_ref().map(|c| c.bytes()).unwrap_or(0)
+    }
+
     // -- Full Graph Training baseline ---------------------------------------
 
     fn full_graph_epoch(&mut self, env: &mut CoreEnv<'_>) -> Result<()> {
@@ -372,7 +380,7 @@ impl GstTask for MalnetTask<'_> {
             if chunk.len() < b {
                 break;
             }
-            env.timer.start();
+            env.obs.step_start();
             for &g in chunk {
                 let out = self.full_step_one(env.eng, env.ps, g)?;
                 env.accum.add(&out.grads);
@@ -380,7 +388,7 @@ impl GstTask for MalnetTask<'_> {
             let lr = env.lr();
             let avg = env.accum.mean();
             ops::apply(env.eng, env.ps, avg, lr)?;
-            env.timer.stop();
+            env.obs.step_stop();
             *env.step += 1;
         }
         Ok(())

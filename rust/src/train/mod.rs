@@ -147,6 +147,10 @@ pub struct TrainConfig {
     /// pure execution knob: served blocks are bit-identical to fresh
     /// fills, so trained parameters never depend on it. 0 disables.
     pub fill_cache_mb: usize,
+    /// Observability sinks (report recording, JSONL trace, heartbeat).
+    /// Execution-only like `workers`: parameters are bit-identical with
+    /// recording on or off (pinned by `tests/gst_core.rs`).
+    pub obs: crate::obs::ObsConfig,
 }
 
 impl Default for TrainConfig {
@@ -164,17 +168,26 @@ impl Default for TrainConfig {
             eval_every: 5,
             lr: None,
             fill_cache_mb: 0,
+            obs: Default::default(),
         }
     }
 }
 
-/// Result of a full training run.
-#[derive(Clone, Debug, Default)]
+/// Result of a full training run. The scalar fields are views over the
+/// run's `obs::Recorder`; `report` is the complete machine-readable
+/// `gst-run-report/v1` document (written out by `--report-json`).
+#[derive(Clone, Debug)]
 pub struct RunResult {
     pub train_metric: f64,
     pub test_metric: f64,
-    /// mean wall-clock per optimization step, milliseconds (Table 3)
+    /// mean wall-clock per optimization step, milliseconds, excluding
+    /// the cold first epoch (Table 3)
     pub step_ms: f64,
+    /// median / 95th-percentile / max step wall-clock (tail visibility
+    /// the Table 3 means hide)
+    pub step_p50_ms: f64,
+    pub step_p95_ms: f64,
+    pub step_max_ms: f64,
     pub curve: crate::metrics::Curve,
     /// total embed_fwd/grad_step/... invocations (runtime accounting)
     pub call_counts: std::collections::HashMap<String, usize>,
@@ -182,6 +195,8 @@ pub struct RunResult {
     pub fill_cache: crate::metrics::CacheStats,
     /// engine parameter-literal cache counters
     pub param_cache: crate::metrics::CacheStats,
+    /// the full run report (`gst-run-report/v1`)
+    pub report: crate::util::json::Json,
 }
 
 #[cfg(test)]

@@ -40,6 +40,18 @@ impl BatchBufs {
         }
     }
 
+    /// Resident bytes across every region (telemetry gauge).
+    pub fn bytes(&self) -> usize {
+        4 * (self.nodes.len()
+            + self.adj.len()
+            + self.mask.len()
+            + self.stale.len()
+            + self.eta.len()
+            + self.invj.len()
+            + self.labels.len()
+            + self.pair.len())
+    }
+
     /// Mutable view of slot `i`'s (nodes, adj, mask) region.
     pub fn slot(
         &mut self,

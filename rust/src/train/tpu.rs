@@ -353,4 +353,12 @@ impl GstTask for TpuTask<'_> {
             .map(|c| c.stats())
             .unwrap_or_default()
     }
+
+    fn prepared_bytes(&self) -> usize {
+        self.prepared.iter().map(|p| p.bytes()).sum()
+    }
+
+    fn fill_cache_bytes(&self) -> usize {
+        self.fill_cache.as_ref().map(|c| c.bytes()).unwrap_or(0)
+    }
 }

@@ -37,6 +37,15 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Largest sample (0.0 for empty, to match the other helpers).
+pub fn max(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
 /// Trimmed mean dropping the `frac` smallest and largest samples each —
 /// the bench harness's outlier-resistant point estimate.
 pub fn trimmed_mean(xs: &[f64], frac: f64) -> f64 {
@@ -75,6 +84,13 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn max_of_samples() {
+        assert_eq!(max(&[]), 0.0);
+        assert_eq!(max(&[3.0, -1.0, 2.0]), 3.0);
+        assert_eq!(max(&[-3.0, -1.0]), -1.0);
     }
 
     #[test]

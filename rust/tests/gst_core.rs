@@ -10,8 +10,10 @@
 //! parameters** after training.
 
 use gst::datasets::{MalnetDataset, MalnetSplit, TpuDataset};
+use gst::obs::ObsConfig;
 use gst::runtime::Engine;
 use gst::train::{MalnetTrainer, Method, TpuTrainer, TrainConfig};
+use gst::util::json::Json;
 
 fn dir(v: &str) -> Option<String> {
     let d = format!("{}/artifacts/{v}", env!("CARGO_MANIFEST_DIR"));
@@ -155,12 +157,90 @@ fn micro_batches_scale_the_effective_batch() {
         c.micro_batches = micro;
         let mut tr = MalnetTrainer::new(&eng, &data, c).unwrap();
         tr.train().unwrap();
-        // steps_done counts micro-batches; the timer counts optimizer
-        // steps (groups)
-        (tr.steps_done(), tr.timer.count())
+        // steps_done counts micro-batches; the recorder's step timer
+        // counts optimizer steps (groups)
+        (tr.steps_done(), tr.obs.step_count())
     };
     let (micro1, groups1) = steps(1);
     let (micro4, groups4) = steps(4);
     assert_eq!(micro1, micro4, "same micro-batch stream either way");
     assert_eq!(groups4, (groups1 + 3) / 4);
+}
+
+#[test]
+fn observability_sinks_never_change_parameters() {
+    let Some(d) = dir("malnet_sage_n128") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let eng = Engine::open(&d).unwrap();
+    let data = MalnetDataset::generate(MalnetSplit::Tiny, 40, 3);
+    let trace = std::env::temp_dir()
+        .join(format!("gst_obs_e2e_{}.jsonl", std::process::id()));
+    // recording, tracing, and the heartbeat are execution-only, exactly
+    // like workers and the fill cache: same parameters either way
+    let run = |obs: ObsConfig| {
+        let mut c = cfg(Method::GstEFD, 1);
+        c.finetune_epochs = 1;
+        c.obs = obs;
+        let mut tr = MalnetTrainer::new(&eng, &data, c).unwrap();
+        let res = tr.train().unwrap();
+        (tr.ps.values.clone(), tr.ps.m.clone(), tr.ps.v.clone(), res)
+    };
+    let (p0, m0, v0, r0) = run(ObsConfig::default());
+    let (p1, m1, v1, r1) = run(ObsConfig {
+        record: true,
+        trace_out: Some(trace.to_str().unwrap().to_string()),
+        log_every: 2,
+    });
+    assert_eq!(p0, p1, "parameters diverge with observability on");
+    assert_eq!(m0, m1, "Adam m moments diverge with observability on");
+    assert_eq!(v0, v1, "Adam v moments diverge with observability on");
+    assert_eq!(r0.test_metric, r1.test_metric);
+
+    // both runs carry a complete report document; the enabled run fills
+    // the telemetry sections
+    let rep = &r1.report;
+    assert_eq!(rep.at("schema").as_str(), Some("gst-run-report/v1"));
+    let phases = rep.at("phases").as_obj().unwrap();
+    for key in [
+        "step", "sample", "fill", "embed_fwd", "grad", "table_commit",
+        "eval", "finetune",
+    ] {
+        assert!(phases.contains_key(key), "missing phase `{key}`");
+    }
+    // the in-step leaf phases nest inside `step`, so their breakdown
+    // can account for at most the step total
+    let ms = |k: &str| phases[k].at("total_ms").as_f64().unwrap();
+    let leaves = ms("sample")
+        + ms("fill")
+        + ms("embed_fwd")
+        + ms("grad")
+        + ms("table_commit");
+    assert!(leaves > 0.0, "no phase time recorded");
+    assert!(leaves <= ms("step") * 1.001, "leaf phases exceed step");
+    // per-epoch staleness telemetry: one entry per training epoch when
+    // enabled, none when disabled
+    assert_eq!(rep.at("staleness").as_arr().unwrap().len(), 1);
+    assert!(r0.report.at("staleness").as_arr().unwrap().is_empty());
+    // GST+EFD draws SED over stale segments
+    assert!(rep.at("sed").at("stale_total").as_f64().unwrap() > 0.0);
+    assert!(
+        rep.at("gauges")
+            .at("memory_model_peak_bytes")
+            .as_f64()
+            .unwrap()
+            > 0.0
+    );
+    // every trace line is one well-formed event object
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let mut spans = 0usize;
+    for line in text.lines() {
+        let ev = Json::parse(line).unwrap();
+        if ev.at("ev").as_str() == Some("span") {
+            spans += 1;
+        }
+    }
+    assert!(spans > 0, "no span events in the trace");
+    let _ = std::fs::remove_file(&trace);
 }
