@@ -89,10 +89,12 @@ pub fn artifacts(variant: &str) -> Option<String> {
 }
 
 /// Write a bench's (label, mean ms) series as a perf-trajectory JSON
-/// record (`BENCH_<name>.json`, or `$BENCH_OUT/BENCH_<name>.json`), the
-/// format CI accumulates run over run. A run that had to skip (artifacts
-/// not built) still writes the file with `skipped: true` so the
-/// trajectory has no silent holes.
+/// record (`BENCH_<name>.json` at the repository root, or
+/// `$BENCH_OUT/BENCH_<name>.json`), the format CI accumulates run over
+/// run. The repo-root default means a plain `cargo bench` lands the
+/// artifact where CI uploads it from, regardless of the invocation cwd.
+/// A run that had to skip (artifacts not built) still writes the file
+/// with `skipped: true` so the trajectory has no silent holes.
 pub fn emit_json(name: &str, entries: &[(String, f64)], skipped: bool) {
     use gst::util::json::Json;
     let payload = Json::obj(vec![
@@ -109,12 +111,19 @@ pub fn emit_json(name: &str, entries: &[(String, f64)], skipped: bool) {
             })),
         ),
     ]);
-    let dir = std::env::var("BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let dir = std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| repo_root().into());
     let path = format!("{dir}/BENCH_{name}.json");
     match std::fs::write(&path, payload.to_string()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("emit_json: {path}: {e}"),
     }
+}
+
+/// Default artifact directory: the repository root (one level above the
+/// cargo workspace), fixed at compile time so it never depends on cwd.
+fn repo_root() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/..")
 }
 
 /// Like [`emit_json`] but for benches whose natural unit is not
@@ -142,7 +151,8 @@ pub fn emit_json_unit(
             })),
         ),
     ]);
-    let dir = std::env::var("BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let dir = std::env::var("BENCH_OUT")
+        .unwrap_or_else(|_| repo_root().into());
     let path = format!("{dir}/BENCH_{name}.json");
     match std::fs::write(&path, payload.to_string()) {
         Ok(()) => println!("wrote {path}"),

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   experiment   regenerate a paper table/figure (see DESIGN.md §5)
 //!   train        one training run with explicit flags
+//!   analyze      trace/report analytics (critical path, drift, workers)
+//!   diff-report  compare two run reports; the CI perf-regression gate
 //!   data-stats   print synthetic dataset statistics (Table 4 shape)
 //!   partition    partition quality report across algorithms
 //!   memory       paper-scale memory model report (the OOM boundary)
@@ -12,9 +14,11 @@ use gst::datasets::{MalnetDataset, MalnetSplit, TpuDataset};
 use gst::exp::{self, common::Env};
 use gst::graph::GraphStats;
 use gst::memory::MemoryModel;
+use gst::obs::analyze;
 use gst::partition::Algorithm;
 use gst::train::{MalnetTrainer, Method, TpuTrainer, TrainConfig};
 use gst::util::cli::Cli;
+use gst::util::json::Json;
 use gst::util::rng::Pcg64;
 
 fn main() {
@@ -33,6 +37,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "experiment" => cmd_experiment(rest),
         "train" => cmd_train(rest),
+        "analyze" => cmd_analyze(rest),
+        "diff-report" => cmd_diff_report(rest),
         "data-stats" => cmd_data_stats(rest),
         "partition" => cmd_partition(rest),
         "memory" => cmd_memory(),
@@ -54,6 +60,8 @@ fn usage() -> String {
          \x20       [--backbone gcn|sage|gps] [--epochs N] [--keep-p P] [--partition ALG] [--seed S]\n\
          \x20       [--micro-batches M] [--workers W] [--fill-cache-mb MB] [--curve]\n\
          \x20       [--report-json FILE] [--trace-out FILE] [--log-every N]\n\
+         \x20 analyze --trace FILE | --report FILE [--top N] [--json FILE]\n\
+         \x20 diff-report <baseline.json> <candidate.json> [--fail-on-regression PCT] [--json FILE]\n\
          \x20 data-stats [--graphs N]\n\
          \x20 partition [--alg ALG] [--max-size N]\n\
          \x20 memory",
@@ -179,6 +187,76 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         println!("  report written to {path}");
     }
     Ok(())
+}
+
+fn cmd_analyze(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("gst analyze", "trace/report analytics")
+        .opt("trace", None, "JSONL trace from `gst train --trace-out`")
+        .opt("report", None, "run report from `gst train --report-json`")
+        .opt("top", Some("5"), "slowest steps to list")
+        .opt("json", None, "also write the analysis document to FILE");
+    let args = cli.parse(argv).map_err(|e| anyhow!(e))?;
+    let top = args.get_usize("top").map_err(|e| anyhow!(e))?;
+    let doc = match (args.get("trace"), args.get("report")) {
+        (Some(path), None) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading trace {path}"))?;
+            analyze::analyze_trace(&text, top).map_err(|e| anyhow!(e))?
+        }
+        (None, Some(path)) => {
+            let report = read_json(path)?;
+            analyze::analyze_report(&report).map_err(|e| anyhow!(e))?
+        }
+        _ => bail!("pass exactly one of --trace FILE or --report FILE"),
+    };
+    print!("{}", analyze::render_analysis(&doc));
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, doc.to_string())
+            .with_context(|| format!("writing analysis {path}"))?;
+        println!("analysis written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_diff_report(argv: &[String]) -> Result<()> {
+    let cli = Cli::new(
+        "gst diff-report",
+        "compare two run reports (the CI perf-regression gate)",
+    )
+    .opt(
+        "fail-on-regression",
+        Some("20"),
+        "exit 1 when a field regressed by more than PCT percent",
+    )
+    .opt("json", None, "also write the diff document to FILE");
+    let args = cli.parse(argv).map_err(|e| anyhow!(e))?;
+    let [base_path, cand_path] = args.positional.as_slice() else {
+        bail!("usage: gst diff-report <baseline.json> <candidate.json>");
+    };
+    let pct =
+        args.get_f64("fail-on-regression").map_err(|e| anyhow!(e))?;
+    let base = read_json(base_path)?;
+    let cand = read_json(cand_path)?;
+    let diff = analyze::diff_reports(&base, &cand, pct)
+        .map_err(|e| anyhow!(e))?;
+    print!("{}", analyze::render_diff(&diff));
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, diff.to_string())
+            .with_context(|| format!("writing diff {path}"))?;
+        println!("diff written to {path}");
+    }
+    if diff.get("pass").and_then(|p| p.as_bool()) != Some(true) {
+        bail!(
+            "performance regression beyond {pct}% against {base_path}"
+        );
+    }
+    Ok(())
+}
+
+fn read_json(path: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))
 }
 
 /// One summary printer for every dataset arm (identical output shape

@@ -1,0 +1,935 @@
+//! Analysis half of the observability stack (DESIGN.md §9): turn the
+//! artifacts PR 3's emit side produces — JSONL traces and
+//! `gst-run-report` documents — into answers.
+//!
+//! Three entry points, all pure functions over [`Json`] (no I/O, so the
+//! CLI, tests and CI wrap them freely):
+//!
+//! * [`analyze_trace`] — per-step critical path, phase self-time
+//!   breakdown, span-attributed worker busy/imbalance, top-k slowest
+//!   steps with phase attribution, and staleness / SED-drop drift
+//!   (EWMA with threshold warnings) from the `epoch_*` trace points;
+//! * [`analyze_report`] — the same drift + phase shares computed from a
+//!   run-report document (v1 **or** v2 — the reader tolerates both);
+//! * [`diff_reports`] — field-by-field comparison of two run reports
+//!   (step p50/p95/steady-mean, phase totals, cache hit rates, worker
+//!   imbalance, lock-wait totals) with a `--fail-on-regression`
+//!   percentage; the CI perf-regression gate is exactly this function.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// EWMA smoothing factor for the drift series (higher = more reactive).
+const EWMA_ALPHA: f64 = 0.3;
+/// Staleness drift warning: epoch mean > EWMA × this factor.
+const STALENESS_DRIFT_FACTOR: f64 = 1.5;
+/// SED drift warning: |epoch drop rate − EWMA| above this absolute gap.
+const SED_DRIFT_ABS: f64 = 0.1;
+/// Time-valued diff fields below this floor (ms) are skipped — relative
+/// deltas on near-zero timings are pure noise.
+const MIN_TIME_MS: f64 = 0.05;
+/// Rate-valued diff fields below this floor are skipped likewise.
+const MIN_RATE: f64 = 0.01;
+
+/// Report schemas the readers accept (v1 predates the worker/contention
+/// sections; every v1 field kept its meaning in v2).
+pub const REPORT_SCHEMAS: [&str; 2] =
+    ["gst-run-report/v1", "gst-run-report/v2"];
+
+/// In-step leaf phases, in commit order (the remaining phases — `step`,
+/// `eval`, `finetune` — are not step-internal).
+const LEAF_PHASES: [&str; 5] =
+    ["sample", "fill", "embed_fwd", "grad", "table_commit"];
+
+/// Validate a run-report document's schema tag; returns it on success.
+pub fn check_report_schema(doc: &Json) -> Result<&str, String> {
+    let schema = doc
+        .get("schema")
+        .and_then(|s| s.as_str())
+        .ok_or("document has no `schema` key — not a gst-run-report")?;
+    if REPORT_SCHEMAS.contains(&schema) {
+        Ok(schema)
+    } else {
+        Err(format!(
+            "unsupported schema `{schema}` (accepted: {})",
+            REPORT_SCHEMAS.join(", ")
+        ))
+    }
+}
+
+/// EWMA over `vals`, seeded with the first value.
+fn ewma_series(vals: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(vals.len());
+    let mut e = 0.0;
+    for (i, &v) in vals.iter().enumerate() {
+        e = if i == 0 { v } else { EWMA_ALPHA * v + (1.0 - EWMA_ALPHA) * e };
+        out.push(e);
+    }
+    out
+}
+
+/// Dotted-path numeric lookup (`"steps.p50_ms"`), `None` when any hop
+/// is missing or non-numeric.
+fn num_at(doc: &Json, path: &str) -> Option<f64> {
+    let mut cur = doc;
+    for key in path.split('.') {
+        cur = cur.get(key)?;
+    }
+    cur.as_f64()
+}
+
+// -- trace analysis ------------------------------------------------------
+
+/// Per-step aggregate assembled from the trace's span events.
+#[derive(Default)]
+struct StepAgg {
+    /// outer `step` span duration, µs
+    dur_us: f64,
+    /// in-step leaf phase totals, µs
+    phase_us: BTreeMap<String, f64>,
+    /// span-attributed busy per worker id, µs
+    worker_us: BTreeMap<i64, f64>,
+}
+
+impl StepAgg {
+    fn leaf(&self, phase: &str) -> f64 {
+        self.phase_us.get(phase).copied().unwrap_or(0.0)
+    }
+
+    /// Critical path through the step's plan → parallel compute →
+    /// commit structure: the serial phases in full, plus the *slowest
+    /// worker's* share of the parallel compute region (untagged traces
+    /// fall back to the serial sum of the compute phases).
+    fn critical_us(&self) -> (f64, f64, f64) {
+        let sample = self.leaf("sample");
+        let commit = self.leaf("table_commit");
+        let compute = if self.worker_us.is_empty() {
+            self.leaf("fill") + self.leaf("embed_fwd") + self.leaf("grad")
+        } else {
+            self.worker_us.values().fold(0.0f64, |a, &b| a.max(b))
+        };
+        (sample, compute, commit)
+    }
+
+    fn dominant_phase(&self) -> (&'static str, f64) {
+        let mut best = ("none", 0.0f64);
+        for p in LEAF_PHASES {
+            let us = self.leaf(p);
+            if us > best.1 {
+                best = (p, us);
+            }
+        }
+        best
+    }
+}
+
+/// Analyze a JSONL trace (the `--trace-out` stream) into a
+/// `gst-trace-analysis/v1` document. Unknown event kinds are tolerated;
+/// malformed JSON lines are an error (a truncated trace should be loud).
+pub fn analyze_trace(text: &str, top_k: usize) -> Result<Json, String> {
+    let mut spans = 0usize;
+    let mut points = 0usize;
+    let mut phase_tot: BTreeMap<String, (f64, u64)> = BTreeMap::new();
+    let mut steps: BTreeMap<u64, StepAgg> = BTreeMap::new();
+    let mut worker_tot: BTreeMap<i64, f64> = BTreeMap::new();
+    // (epoch, coverage, mean staleness)
+    let mut stale_epochs: Vec<(f64, f64, f64)> = Vec::new();
+    // (epoch, cumulative stale_total, cumulative stale_dropped)
+    let mut sed_epochs: Vec<(f64, f64, f64)> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ev = Json::parse(line)
+            .map_err(|e| format!("trace line {}: {e}", lineno + 1))?;
+        match ev.get("ev").and_then(|v| v.as_str()) {
+            Some("span") => {
+                spans += 1;
+                let phase = ev
+                    .get("phase")
+                    .and_then(|p| p.as_str())
+                    .ok_or_else(|| {
+                        format!("trace line {}: span without phase", lineno + 1)
+                    })?
+                    .to_string();
+                let dur =
+                    ev.get("dur_us").and_then(|d| d.as_f64()).unwrap_or(0.0);
+                let step = ev
+                    .get("step")
+                    .and_then(|s| s.as_f64())
+                    .unwrap_or(0.0) as u64;
+                let worker = ev
+                    .get("worker")
+                    .and_then(|w| w.as_f64())
+                    .map(|w| w as i64);
+                let slot = phase_tot.entry(phase.clone()).or_insert((0.0, 0));
+                slot.0 += dur;
+                slot.1 += 1;
+                if let Some(w) = worker {
+                    *worker_tot.entry(w).or_insert(0.0) += dur;
+                }
+                // eval/finetune run outside steps; their `step` field is
+                // whatever the counter last was — don't attribute them
+                if phase != "eval" && phase != "finetune" {
+                    let agg = steps.entry(step).or_default();
+                    if phase == "step" {
+                        agg.dur_us += dur;
+                    } else {
+                        *agg.phase_us.entry(phase).or_insert(0.0) += dur;
+                        if let Some(w) = worker {
+                            *agg.worker_us.entry(w).or_insert(0.0) += dur;
+                        }
+                    }
+                }
+            }
+            Some("point") => {
+                points += 1;
+                let name =
+                    ev.get("name").and_then(|n| n.as_str()).unwrap_or("");
+                let data = ev.get("data").cloned().unwrap_or(Json::Null);
+                let f = |k: &str| {
+                    data.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0)
+                };
+                match name {
+                    "epoch_staleness" => stale_epochs.push((
+                        f("epoch"),
+                        f("coverage"),
+                        f("mean"),
+                    )),
+                    "epoch_sed" => sed_epochs.push((
+                        f("epoch"),
+                        f("stale_total"),
+                        f("stale_dropped"),
+                    )),
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // step wall-clock stats, in step-id order
+    let durs_ms: Vec<f64> =
+        steps.values().map(|a| a.dur_us / 1e3).collect();
+    let step_total_ms: f64 = durs_ms.iter().sum();
+    let steps_json = Json::obj(vec![
+        ("count", Json::num(durs_ms.len() as f64)),
+        ("total_ms", Json::num(step_total_ms)),
+        ("mean_ms", Json::num(stats::mean(&durs_ms))),
+        ("p50_ms", Json::num(stats::percentile(&durs_ms, 50.0))),
+        ("p95_ms", Json::num(stats::percentile(&durs_ms, 95.0))),
+        ("max_ms", Json::num(stats::max(&durs_ms))),
+    ]);
+
+    // per-phase totals with share of step wall-clock
+    let phases_json = Json::Obj(
+        phase_tot
+            .iter()
+            .map(|(p, &(us, calls))| {
+                let ms = us / 1e3;
+                let pct = if step_total_ms > 0.0 {
+                    100.0 * ms / step_total_ms
+                } else {
+                    0.0
+                };
+                (
+                    p.clone(),
+                    Json::obj(vec![
+                        ("total_ms", Json::num(ms)),
+                        ("calls", Json::num(calls as f64)),
+                        ("pct_of_step", Json::num(pct)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+
+    // self-time: in-step leaves vs the step wall-clock they nest inside
+    // (with >1 worker the leaf sum may exceed wall-clock; clamp at 0)
+    let leaf_ms: f64 = steps
+        .values()
+        .map(|a| LEAF_PHASES.iter().map(|p| a.leaf(p)).sum::<f64>())
+        .sum::<f64>()
+        / 1e3;
+    let self_json = Json::obj(vec![
+        ("step_ms", Json::num(step_total_ms)),
+        ("leaf_ms", Json::num(leaf_ms)),
+        (
+            "unattributed_ms",
+            Json::num((step_total_ms - leaf_ms).max(0.0)),
+        ),
+    ]);
+
+    // critical path, aggregated over steps
+    let (mut cp_sample, mut cp_compute, mut cp_commit) = (0.0, 0.0, 0.0);
+    for agg in steps.values() {
+        let (s, c, t) = agg.critical_us();
+        cp_sample += s;
+        cp_compute += c;
+        cp_commit += t;
+    }
+    let critical_ms = (cp_sample + cp_compute + cp_commit) / 1e3;
+    let critical_json = Json::obj(vec![
+        ("sample_ms", Json::num(cp_sample / 1e3)),
+        ("compute_ms", Json::num(cp_compute / 1e3)),
+        ("commit_ms", Json::num(cp_commit / 1e3)),
+        ("critical_ms", Json::num(critical_ms)),
+        (
+            "stall_ms",
+            Json::num((step_total_ms - critical_ms).max(0.0)),
+        ),
+    ]);
+
+    // span-attributed worker busy (worker ids are dense from 0, but a
+    // sparse map stays correct if a worker recorded nothing)
+    let nworkers = worker_tot
+        .keys()
+        .next_back()
+        .map(|&w| w as usize + 1)
+        .unwrap_or(0);
+    let busy_ms: Vec<f64> = (0..nworkers)
+        .map(|w| {
+            worker_tot.get(&(w as i64)).copied().unwrap_or(0.0) / 1e3
+        })
+        .collect();
+    let workers_json = Json::obj(vec![
+        ("count", Json::num(nworkers as f64)),
+        ("busy_ms", Json::arr(busy_ms.iter().map(|&b| Json::num(b)))),
+        ("imbalance_pct", Json::num(super::imbalance_pct(&busy_ms))),
+    ]);
+
+    // top-k slowest steps with dominant-phase attribution
+    let mut ranked: Vec<(&u64, &StepAgg)> = steps.iter().collect();
+    ranked.sort_by(|a, b| {
+        b.1.dur_us
+            .partial_cmp(&a.1.dur_us)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(b.0))
+    });
+    let top_json = Json::arr(ranked.iter().take(top_k).map(|(id, agg)| {
+        let (phase, us) = agg.dominant_phase();
+        let pct = if agg.dur_us > 0.0 {
+            100.0 * us / agg.dur_us
+        } else {
+            0.0
+        };
+        Json::obj(vec![
+            ("step", Json::num(**id as f64)),
+            ("dur_ms", Json::num(agg.dur_us / 1e3)),
+            ("dominant_phase", Json::str(phase)),
+            ("dominant_pct", Json::num(pct)),
+        ])
+    }));
+
+    let stale_means: Vec<f64> =
+        stale_epochs.iter().map(|&(_, _, m)| m).collect();
+    let staleness_json = staleness_drift(&stale_epochs, &stale_means);
+    let sed_json = sed_drift(&sed_epochs);
+
+    Ok(Json::obj(vec![
+        ("schema", Json::str("gst-trace-analysis/v1")),
+        (
+            "events",
+            Json::obj(vec![
+                ("spans", Json::num(spans as f64)),
+                ("points", Json::num(points as f64)),
+            ]),
+        ),
+        ("steps", steps_json),
+        ("phases", phases_json),
+        ("self_time", self_json),
+        ("critical_path", critical_json),
+        ("workers", workers_json),
+        ("top_steps", top_json),
+        ("staleness", staleness_json),
+        ("sed", sed_json),
+    ]))
+}
+
+/// Staleness drift section shared by the trace and report analyzers:
+/// per-epoch means with their EWMA, plus threshold warnings.
+fn staleness_drift(
+    epochs: &[(f64, f64, f64)],
+    means: &[f64],
+) -> Json {
+    let ewma = ewma_series(means);
+    let mut warnings = Vec::new();
+    for i in 1..means.len() {
+        if ewma[i - 1] > 1e-9
+            && means[i] > ewma[i - 1] * STALENESS_DRIFT_FACTOR
+        {
+            warnings.push(Json::str(&format!(
+                "staleness drift at epoch {}: mean {:.2} exceeds \
+                 EWMA {:.2} by more than {:.0}%",
+                epochs[i].0,
+                means[i],
+                ewma[i - 1],
+                (STALENESS_DRIFT_FACTOR - 1.0) * 100.0
+            )));
+        }
+    }
+    Json::obj(vec![
+        (
+            "epochs",
+            Json::arr(epochs.iter().zip(&ewma).map(
+                |(&(epoch, coverage, mean), &e)| {
+                    Json::obj(vec![
+                        ("epoch", Json::num(epoch)),
+                        ("coverage", Json::num(coverage)),
+                        ("mean", Json::num(mean)),
+                        ("ewma", Json::num(e)),
+                    ])
+                },
+            )),
+        ),
+        ("warnings", Json::Arr(warnings)),
+    ])
+}
+
+/// SED drop-rate drift from the cumulative `epoch_sed` counters: the
+/// per-epoch rate is the *delta* drop fraction, EWMA-smoothed, warning
+/// when an epoch departs from the running average by more than
+/// [`SED_DRIFT_ABS`] (SED draws are Bernoulli with fixed p, so a real
+/// departure means the stale-slot population itself shifted).
+fn sed_drift(cumulative: &[(f64, f64, f64)]) -> Json {
+    let mut rates = Vec::with_capacity(cumulative.len());
+    let (mut prev_t, mut prev_d) = (0.0, 0.0);
+    for &(_, t, d) in cumulative {
+        let (dt, dd) = (t - prev_t, d - prev_d);
+        rates.push(if dt > 0.0 { dd / dt } else { 0.0 });
+        (prev_t, prev_d) = (t, d);
+    }
+    let ewma = ewma_series(&rates);
+    let mut warnings = Vec::new();
+    for i in 1..rates.len() {
+        if (rates[i] - ewma[i - 1]).abs() > SED_DRIFT_ABS {
+            warnings.push(Json::str(&format!(
+                "SED drop-rate drift at epoch {}: {:.3} vs EWMA {:.3}",
+                cumulative[i].0, rates[i], ewma[i - 1]
+            )));
+        }
+    }
+    Json::obj(vec![
+        (
+            "epochs",
+            Json::arr(cumulative.iter().zip(rates.iter().zip(&ewma)).map(
+                |(&(epoch, _, _), (&rate, &e))| {
+                    Json::obj(vec![
+                        ("epoch", Json::num(epoch)),
+                        ("drop_rate", Json::num(rate)),
+                        ("ewma", Json::num(e)),
+                    ])
+                },
+            )),
+        ),
+        ("warnings", Json::Arr(warnings)),
+    ])
+}
+
+// -- report analysis -----------------------------------------------------
+
+/// Analyze a `gst-run-report` document (v1 or v2) into a
+/// `gst-report-analysis/v1` summary: phase shares of step wall-clock,
+/// cache hit rates, staleness drift, and — when the report carries them
+/// (v2) — the worker/contention sections verbatim.
+pub fn analyze_report(doc: &Json) -> Result<Json, String> {
+    let schema = check_report_schema(doc)?.to_string();
+    let step_ms = num_at(doc, "phases.step.total_ms").unwrap_or(0.0);
+    let phases_json = match doc.get("phases").and_then(|p| p.as_obj()) {
+        Some(m) => Json::Obj(
+            m.iter()
+                .map(|(name, p)| {
+                    let ms =
+                        num_at(p, "total_ms").unwrap_or(0.0);
+                    let pct = if step_ms > 0.0 {
+                        100.0 * ms / step_ms
+                    } else {
+                        0.0
+                    };
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("total_ms", Json::num(ms)),
+                            (
+                                "calls",
+                                Json::num(
+                                    num_at(p, "calls").unwrap_or(0.0),
+                                ),
+                            ),
+                            ("pct_of_step", Json::num(pct)),
+                        ]),
+                    )
+                })
+                .collect(),
+        ),
+        None => Json::Null,
+    };
+    let epochs: Vec<(f64, f64, f64)> = doc
+        .get("staleness")
+        .and_then(|s| s.as_arr())
+        .map(|arr| {
+            arr.iter()
+                .map(|e| {
+                    (
+                        num_at(e, "epoch").unwrap_or(0.0),
+                        num_at(e, "coverage").unwrap_or(0.0),
+                        num_at(e, "mean").unwrap_or(0.0),
+                    )
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    let means: Vec<f64> = epochs.iter().map(|&(_, _, m)| m).collect();
+    let caches = Json::obj(vec![
+        (
+            "fill_hit_rate",
+            Json::num(num_at(doc, "caches.fill.hit_rate").unwrap_or(0.0)),
+        ),
+        (
+            "param_literal_hit_rate",
+            Json::num(
+                num_at(doc, "caches.param_literal.hit_rate")
+                    .unwrap_or(0.0),
+            ),
+        ),
+    ]);
+    Ok(Json::obj(vec![
+        ("schema", Json::str("gst-report-analysis/v1")),
+        ("source_schema", Json::str(&schema)),
+        (
+            "steps",
+            doc.get("steps").cloned().unwrap_or(Json::Null),
+        ),
+        ("phases", phases_json),
+        ("caches", caches),
+        ("staleness", staleness_drift(&epochs, &means)),
+        ("sed", doc.get("sed").cloned().unwrap_or(Json::Null)),
+        (
+            "workers",
+            doc.get("workers").cloned().unwrap_or(Json::Null),
+        ),
+        (
+            "contention",
+            doc.get("contention").cloned().unwrap_or(Json::Null),
+        ),
+    ]))
+}
+
+// -- report diffing (the perf-regression gate) ---------------------------
+
+/// One compared field: `worse_when_higher` decides the regression
+/// direction (time-like fields regress upward, hit rates downward).
+struct DiffField {
+    name: String,
+    base: f64,
+    cand: f64,
+    worse_when_higher: bool,
+    floor: f64,
+}
+
+/// Compare two run reports field-by-field. A field regresses when it
+/// moved in its worse direction by more than `fail_pct` percent
+/// (relative to baseline); fields whose baseline sits under a noise
+/// floor are reported but never counted as regressions. Returns the
+/// `gst-report-diff/v1` document; `pass` is false iff any field
+/// regressed.
+pub fn diff_reports(
+    base: &Json,
+    cand: &Json,
+    fail_pct: f64,
+) -> Result<Json, String> {
+    check_report_schema(base)?;
+    check_report_schema(cand)?;
+    let mut fields: Vec<DiffField> = Vec::new();
+    let mut push = |name: &str, higher_worse: bool, floor: f64| {
+        if let (Some(b), Some(c)) = (num_at(base, name), num_at(cand, name))
+        {
+            fields.push(DiffField {
+                name: name.to_string(),
+                base: b,
+                cand: c,
+                worse_when_higher: higher_worse,
+                floor,
+            });
+        }
+    };
+    for f in ["steady_mean_ms", "p50_ms", "p95_ms"] {
+        push(&format!("steps.{f}"), true, MIN_TIME_MS);
+    }
+    // every phase present in both documents
+    if let (Some(bp), Some(cp)) = (
+        base.get("phases").and_then(|p| p.as_obj()),
+        cand.get("phases").and_then(|p| p.as_obj()),
+    ) {
+        for name in bp.keys() {
+            if cp.contains_key(name) {
+                push(
+                    &format!("phases.{name}.total_ms"),
+                    true,
+                    MIN_TIME_MS,
+                );
+            }
+        }
+    }
+    push("caches.fill.hit_rate", false, MIN_RATE);
+    push("caches.param_literal.hit_rate", false, MIN_RATE);
+    // v2-only sections: compared only when both reports carry them
+    push("workers.imbalance_pct", true, 1.0);
+    push("contention.total_wait_ms", true, MIN_TIME_MS);
+    push("engine.marshalled_bytes", true, 1.0);
+
+    let mut rows = Vec::with_capacity(fields.len());
+    let mut regressions = Vec::new();
+    for f in &fields {
+        let measurable = f.base.abs() >= f.floor;
+        let delta_pct = if measurable {
+            100.0 * (f.cand - f.base) / f.base
+        } else {
+            0.0
+        };
+        let worse = if f.worse_when_higher {
+            delta_pct > fail_pct
+        } else {
+            delta_pct < -fail_pct
+        };
+        let regression = measurable && worse;
+        if regression {
+            regressions.push(f.name.clone());
+        }
+        rows.push(Json::obj(vec![
+            ("field", Json::str(&f.name)),
+            ("base", Json::num(f.base)),
+            ("candidate", Json::num(f.cand)),
+            ("delta_pct", Json::num(delta_pct)),
+            (
+                "worse_direction",
+                Json::str(if f.worse_when_higher { "up" } else { "down" }),
+            ),
+            ("regression", Json::Bool(regression)),
+        ]));
+    }
+    let pass = regressions.is_empty();
+    Ok(Json::obj(vec![
+        ("schema", Json::str("gst-report-diff/v1")),
+        ("fail_on_pct", Json::num(fail_pct)),
+        ("fields", Json::Arr(rows)),
+        (
+            "regressions",
+            Json::arr(regressions.iter().map(|r| Json::str(r))),
+        ),
+        ("pass", Json::Bool(pass)),
+    ]))
+}
+
+// -- text rendering (the CLI's human-facing view) ------------------------
+
+fn fmt_warnings(out: &mut String, section: &Json) {
+    if let Some(warns) = section.get("warnings").and_then(|w| w.as_arr()) {
+        for w in warns {
+            if let Some(s) = w.as_str() {
+                out.push_str(&format!("  warning: {s}\n"));
+            }
+        }
+    }
+}
+
+/// Render a `gst-trace-analysis/v1` or `gst-report-analysis/v1`
+/// document for the terminal.
+pub fn render_analysis(a: &Json) -> String {
+    let mut out = String::new();
+    let schema = a.get("schema").and_then(|s| s.as_str()).unwrap_or("?");
+    out.push_str(&format!("{schema}\n"));
+    if let Some(steps) = a.get("steps").filter(|s| s.as_obj().is_some()) {
+        let g = |k: &str| num_at(steps, k).unwrap_or(0.0);
+        out.push_str(&format!(
+            "steps: {}  mean {:.3} ms  p50 {:.3}  p95 {:.3}  max {:.3}\n",
+            g("count") as u64,
+            g("mean_ms"),
+            g("p50_ms"),
+            g("p95_ms"),
+            g("max_ms")
+        ));
+    }
+    if let Some(phases) = a.get("phases").and_then(|p| p.as_obj()) {
+        out.push_str("phase breakdown:\n");
+        let mut rows: Vec<_> = phases.iter().collect();
+        rows.sort_by(|a, b| {
+            num_at(b.1, "total_ms")
+                .partial_cmp(&num_at(a.1, "total_ms"))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for (name, p) in rows {
+            out.push_str(&format!(
+                "  {:<14} {:>10.3} ms  {:>5.1}% of step  ({} calls)\n",
+                name,
+                num_at(p, "total_ms").unwrap_or(0.0),
+                num_at(p, "pct_of_step").unwrap_or(0.0),
+                num_at(p, "calls").unwrap_or(0.0) as u64
+            ));
+        }
+    }
+    if let Some(cp) = a.get("critical_path") {
+        let g = |k: &str| num_at(cp, k).unwrap_or(0.0);
+        out.push_str(&format!(
+            "critical path: sample {:.3} + compute {:.3} + commit {:.3} \
+             = {:.3} ms  (stall {:.3})\n",
+            g("sample_ms"),
+            g("compute_ms"),
+            g("commit_ms"),
+            g("critical_ms"),
+            g("stall_ms")
+        ));
+    }
+    if let Some(w) = a.get("workers").filter(|w| w.as_obj().is_some()) {
+        let busy: Vec<String> = w
+            .get("busy_ms")
+            .and_then(|b| b.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .map(|v| format!("{:.2}", v.as_f64().unwrap_or(0.0)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        out.push_str(&format!(
+            "workers: {}  busy [{}] ms  imbalance {:.1}%\n",
+            num_at(w, "count").unwrap_or(0.0) as u64,
+            busy.join(", "),
+            num_at(w, "imbalance_pct").unwrap_or(0.0)
+        ));
+    }
+    if let Some(top) = a.get("top_steps").and_then(|t| t.as_arr()) {
+        if !top.is_empty() {
+            out.push_str("slowest steps:\n");
+            for s in top {
+                out.push_str(&format!(
+                    "  step {:>5}  {:>9.3} ms  dominant {} ({:.1}%)\n",
+                    num_at(s, "step").unwrap_or(0.0) as u64,
+                    num_at(s, "dur_ms").unwrap_or(0.0),
+                    s.get("dominant_phase")
+                        .and_then(|p| p.as_str())
+                        .unwrap_or("?"),
+                    num_at(s, "dominant_pct").unwrap_or(0.0)
+                ));
+            }
+        }
+    }
+    if let Some(st) = a.get("staleness").filter(|s| s.as_obj().is_some()) {
+        if let Some(arr) = st.get("epochs").and_then(|e| e.as_arr()) {
+            if !arr.is_empty() {
+                out.push_str("staleness drift (mean / EWMA):\n");
+                for e in arr {
+                    out.push_str(&format!(
+                        "  epoch {:>3}  {:.2} / {:.2}\n",
+                        num_at(e, "epoch").unwrap_or(0.0) as u64,
+                        num_at(e, "mean").unwrap_or(0.0),
+                        num_at(e, "ewma").unwrap_or(0.0)
+                    ));
+                }
+            }
+        }
+        fmt_warnings(&mut out, st);
+    }
+    if let Some(sed) = a.get("sed").filter(|s| s.as_obj().is_some()) {
+        if let Some(arr) = sed.get("epochs").and_then(|e| e.as_arr()) {
+            if !arr.is_empty() {
+                out.push_str("SED drop-rate drift (rate / EWMA):\n");
+                for e in arr {
+                    out.push_str(&format!(
+                        "  epoch {:>3}  {:.3} / {:.3}\n",
+                        num_at(e, "epoch").unwrap_or(0.0) as u64,
+                        num_at(e, "drop_rate").unwrap_or(0.0),
+                        num_at(e, "ewma").unwrap_or(0.0)
+                    ));
+                }
+            }
+        }
+        fmt_warnings(&mut out, sed);
+    }
+    out
+}
+
+/// Render a `gst-report-diff/v1` document for the terminal.
+pub fn render_diff(d: &Json) -> String {
+    let mut out = String::new();
+    let pass = d.get("pass").and_then(|p| p.as_bool()).unwrap_or(false);
+    out.push_str(&format!(
+        "{:<34} {:>12} {:>12} {:>9}\n",
+        "field", "base", "candidate", "delta"
+    ));
+    if let Some(rows) = d.get("fields").and_then(|f| f.as_arr()) {
+        for r in rows {
+            let mark = if r
+                .get("regression")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false)
+            {
+                "  << REGRESSION"
+            } else {
+                ""
+            };
+            out.push_str(&format!(
+                "{:<34} {:>12.3} {:>12.3} {:>8.1}%{}\n",
+                r.get("field").and_then(|f| f.as_str()).unwrap_or("?"),
+                num_at(r, "base").unwrap_or(0.0),
+                num_at(r, "candidate").unwrap_or(0.0),
+                num_at(r, "delta_pct").unwrap_or(0.0),
+                mark
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "result: {} (fail threshold {:.0}%)\n",
+        if pass { "PASS" } else { "FAIL" },
+        num_at(d, "fail_on_pct").unwrap_or(0.0)
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_seeds_with_first_value() {
+        let e = ewma_series(&[10.0, 10.0, 20.0]);
+        assert_eq!(e[0], 10.0);
+        assert_eq!(e[1], 10.0);
+        assert!((e[2] - (0.3 * 20.0 + 0.7 * 10.0)).abs() < 1e-12);
+        assert!(ewma_series(&[]).is_empty());
+    }
+
+    fn mini_report(steady: f64, p95: f64, fill_rate: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"schema":"gst-run-report/v2",
+                "steps":{{"steady_mean_ms":{steady},"p50_ms":{steady},
+                          "p95_ms":{p95}}},
+                "phases":{{"step":{{"total_ms":10.0,"calls":4}},
+                           "fill":{{"total_ms":2.0,"calls":8}}}},
+                "caches":{{"fill":{{"hit_rate":{fill_rate}}},
+                           "param_literal":{{"hit_rate":0.9}}}},
+                "staleness":[]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn identical_reports_pass_the_diff() {
+        let r = mini_report(5.0, 8.0, 0.8);
+        let d = diff_reports(&r, &r, 20.0).unwrap();
+        assert_eq!(d.at("pass").as_bool(), Some(true));
+        assert!(d.at("regressions").as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn slower_candidate_fails_the_diff() {
+        let base = mini_report(5.0, 8.0, 0.8);
+        let cand = mini_report(6.5, 8.0, 0.8); // +30% steady mean + p50
+        let d = diff_reports(&base, &cand, 20.0).unwrap();
+        assert_eq!(d.at("pass").as_bool(), Some(false));
+        let regs = d.at("regressions").as_arr().unwrap();
+        assert!(regs
+            .iter()
+            .any(|r| r.as_str() == Some("steps.steady_mean_ms")));
+    }
+
+    #[test]
+    fn hit_rate_regresses_downward() {
+        let base = mini_report(5.0, 8.0, 0.8);
+        let cand = mini_report(5.0, 8.0, 0.4); // hit rate halved
+        let d = diff_reports(&base, &cand, 20.0).unwrap();
+        assert_eq!(d.at("pass").as_bool(), Some(false));
+        let regs = d.at("regressions").as_arr().unwrap();
+        assert!(regs
+            .iter()
+            .any(|r| r.as_str() == Some("caches.fill.hit_rate")));
+        // a *higher* hit rate is an improvement, never a regression
+        let better = mini_report(5.0, 8.0, 1.0);
+        let d = diff_reports(&base, &better, 20.0).unwrap();
+        assert_eq!(d.at("pass").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn tiny_baselines_never_regress() {
+        let base = mini_report(0.001, 0.001, 0.8);
+        let cand = mini_report(0.04, 0.04, 0.8); // huge % on noise floor
+        let d = diff_reports(&base, &cand, 20.0).unwrap();
+        assert_eq!(d.at("pass").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn diff_rejects_unknown_schemas() {
+        let bad = Json::parse(r#"{"schema":"nope/v9"}"#).unwrap();
+        let good = mini_report(5.0, 8.0, 0.8);
+        assert!(diff_reports(&bad, &good, 20.0).is_err());
+        assert!(diff_reports(&good, &bad, 20.0).is_err());
+        assert!(check_report_schema(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn report_reader_accepts_v1_and_v2() {
+        let v1 = Json::parse(
+            r#"{"schema":"gst-run-report/v1",
+                "steps":{"count":2},
+                "phases":{"step":{"total_ms":4.0,"calls":2},
+                          "fill":{"total_ms":1.0,"calls":4}},
+                "caches":{"fill":{"hit_rate":0.5},
+                          "param_literal":{"hit_rate":0.9}},
+                "staleness":[{"epoch":1,"coverage":0.5,"mean":2.0}]}"#,
+        )
+        .unwrap();
+        let a = analyze_report(&v1).unwrap();
+        assert_eq!(
+            a.at("source_schema").as_str(),
+            Some("gst-run-report/v1")
+        );
+        // v1 has no worker/contention sections: reader nulls them
+        assert_eq!(a.at("workers"), &Json::Null);
+        assert_eq!(a.at("contention"), &Json::Null);
+        let fill_pct =
+            a.at("phases").at("fill").at("pct_of_step").as_f64().unwrap();
+        assert!((fill_pct - 25.0).abs() < 1e-9);
+        let v2 = mini_report(5.0, 8.0, 0.8);
+        assert!(analyze_report(&v2).is_ok());
+    }
+
+    #[test]
+    fn sed_drift_flags_rate_jumps() {
+        // cumulative counters: epoch rates 0.5, 0.5, then 0.9
+        let j = sed_drift(&[
+            (1.0, 100.0, 50.0),
+            (2.0, 200.0, 100.0),
+            (3.0, 300.0, 190.0),
+        ]);
+        let warns = j.at("warnings").as_arr().unwrap();
+        assert_eq!(warns.len(), 1);
+        assert!(warns[0].as_str().unwrap().contains("epoch 3"));
+        let epochs = j.at("epochs").as_arr().unwrap();
+        assert!(
+            (epochs[2].at("drop_rate").as_f64().unwrap() - 0.9).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn staleness_drift_flags_mean_jumps() {
+        let epochs = [(1.0, 0.5, 2.0), (2.0, 0.8, 2.1), (3.0, 1.0, 9.0)];
+        let means = [2.0, 2.1, 9.0];
+        let j = staleness_drift(&epochs, &means);
+        let warns = j.at("warnings").as_arr().unwrap();
+        assert_eq!(warns.len(), 1);
+        assert!(warns[0].as_str().unwrap().contains("epoch 3"));
+    }
+
+    #[test]
+    fn renderers_cover_every_section() {
+        let r = mini_report(5.0, 8.0, 0.8);
+        let a = analyze_report(&r).unwrap();
+        let text = render_analysis(&a);
+        assert!(text.contains("phase breakdown"));
+        let d = diff_reports(&r, &r, 20.0).unwrap();
+        let text = render_diff(&d);
+        assert!(text.contains("PASS"));
+    }
+}

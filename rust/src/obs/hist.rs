@@ -85,6 +85,59 @@ impl Histogram {
         }
     }
 
+    /// Estimate the `q`-quantile (`q` in [0, 1], clamped) by linear
+    /// interpolation inside the bucket holding the target rank. The
+    /// observed `min`/`max` bound the estimate, so `q = 0` returns the
+    /// minimum, `q = 1` the maximum, and overflow-bucket estimates never
+    /// exceed the largest observed value. Empty histograms return 0.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = q * self.total as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let before = cum as f64;
+            cum += c;
+            if cum as f64 >= target {
+                let lo = if i == 0 { self.min } else { self.edges[i - 1] };
+                let hi = if i < self.edges.len() {
+                    self.edges[i]
+                } else {
+                    self.max
+                };
+                let lo = lo.clamp(self.min, self.max);
+                let hi = hi.clamp(self.min, self.max);
+                let frac = (target - before) / c as f64;
+                return (lo + (hi - lo) * frac).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold `other`'s observations into `self`. Both histograms must
+    /// share the same edge vector (merging across bucketings would have
+    /// no well-defined counts); panics otherwise.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(
+            self.edges, other.edges,
+            "histogram edges must match to merge"
+        );
+        for (a, &b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        if other.total > 0 {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             (
@@ -131,6 +184,107 @@ mod tests {
         assert_eq!(h.min(), 0.0);
         assert_eq!(h.max(), 0.0);
         assert_eq!(h.to_json().at("count").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn quantile_on_empty_histogram_is_zero() {
+        let h = Histogram::new(vec![1.0, 2.0]);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(1.0), 0.0);
+    }
+
+    #[test]
+    fn quantile_extremes_hit_observed_min_and_max() {
+        let mut h = Histogram::new(vec![1.0, 2.0, 4.0]);
+        for v in [0.5, 1.5, 3.0, 9.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.quantile(0.0), 0.5);
+        assert_eq!(h.quantile(1.0), 9.0);
+        // out-of-range q clamps instead of extrapolating
+        assert_eq!(h.quantile(-1.0), 0.5);
+        assert_eq!(h.quantile(2.0), 9.0);
+    }
+
+    #[test]
+    fn quantile_is_monotonic_and_bounded() {
+        let mut h = Histogram::staleness();
+        for v in [0.0, 1.0, 1.0, 3.0, 7.0, 90.0, 5000.0] {
+            h.observe(v);
+        }
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..=20 {
+            let q = h.quantile(i as f64 / 20.0);
+            assert!(q >= prev, "quantile not monotonic at {i}");
+            assert!((0.0..=5000.0).contains(&q));
+            prev = q;
+        }
+    }
+
+    #[test]
+    fn quantile_single_value_collapses() {
+        let mut h = Histogram::new(vec![10.0, 20.0]);
+        h.observe(15.0);
+        for q in [0.0, 0.25, 0.5, 1.0] {
+            assert_eq!(h.quantile(q), 15.0);
+        }
+    }
+
+    #[test]
+    fn quantile_interpolates_within_a_bucket() {
+        // 4 observations all in the (1, 2] bucket of known span
+        let mut h = Histogram::new(vec![1.0, 2.0]);
+        for v in [1.2, 1.4, 1.6, 2.0] {
+            h.observe(v);
+        }
+        // target rank 2 of 4 -> halfway through the bucket [min, 2.0]
+        let q50 = h.quantile(0.5);
+        assert!(q50 > 1.2 && q50 <= 2.0, "q50 = {q50}");
+    }
+
+    #[test]
+    fn merge_accumulates_counts_and_extremes() {
+        let mut a = Histogram::new(vec![1.0, 2.0]);
+        a.observe(0.5);
+        a.observe(1.5);
+        let mut b = Histogram::new(vec![1.0, 2.0]);
+        b.observe(9.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.counts(), &[1, 1, 1]);
+        assert_eq!(a.min(), 0.5);
+        assert_eq!(a.max(), 9.0);
+        assert!((a.mean() - 11.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity_both_ways() {
+        let mut a = Histogram::new(vec![1.0]);
+        a.observe(0.5);
+        let empty = Histogram::new(vec![1.0]);
+        a.merge(&empty);
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.min(), 0.5);
+        assert_eq!(a.max(), 0.5);
+        let mut e = Histogram::new(vec![1.0]);
+        e.merge(&a);
+        assert_eq!(e.count(), 1);
+        assert_eq!(e.min(), 0.5);
+        // merging two empties stays a well-formed empty histogram
+        let mut x = Histogram::new(vec![1.0]);
+        x.merge(&Histogram::new(vec![1.0]));
+        assert_eq!(x.count(), 0);
+        assert_eq!(x.min(), 0.0);
+        assert_eq!(x.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "edges must match")]
+    fn merge_rejects_mismatched_edges() {
+        let mut a = Histogram::new(vec![1.0, 2.0]);
+        let b = Histogram::new(vec![1.0, 3.0]);
+        a.merge(&b);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! on, because `RunResult.step_ms` is a core output of every run
 //! (Table 3), not an opt-in diagnostic.
 
+pub mod analyze;
 pub mod hist;
 mod report;
 mod sink;
@@ -105,6 +106,24 @@ pub struct EpochStats {
 thread_local! {
     /// Span nesting depth on this thread (worker threads start at 0).
     static DEPTH: Cell<u32> = Cell::new(0);
+    /// Worker id tagging this thread's trace spans (-1 = coordinator /
+    /// outside any fork-join compute region).
+    static WORKER: Cell<i64> = Cell::new(-1);
+}
+
+/// Fork-join imbalance over per-worker busy times: `100·(1 − mean/max)`
+/// — 0% when every worker was equally busy, approaching 100% when one
+/// worker did all the work. Fewer than two workers report 0.
+pub fn imbalance_pct(busy: &[f64]) -> f64 {
+    if busy.len() < 2 {
+        return 0.0;
+    }
+    let max = busy.iter().fold(0.0f64, |a, &b| a.max(b));
+    if max <= 0.0 {
+        return 0.0;
+    }
+    let mean = busy.iter().sum::<f64>() / busy.len() as f64;
+    100.0 * (1.0 - mean / max)
 }
 
 /// Run-wide telemetry hub. All methods take `&self` (interior
@@ -121,6 +140,13 @@ pub struct Recorder {
     counters: Mutex<BTreeMap<String, u64>>,
     gauges: Mutex<BTreeMap<String, f64>>,
     epochs: Mutex<Vec<EpochStats>>,
+    /// cumulative per-worker compute busy time (ns), indexed by worker id
+    worker_busy: Mutex<Vec<u64>>,
+    /// fork-join regions recorded into `worker_busy`
+    fork_joins: AtomicU64,
+    /// latest cumulative lock-wait total pushed by the trainer (ns) —
+    /// read by the heartbeat line and the run report
+    lock_wait_ns: AtomicU64,
     sink: Option<TraceSink>,
 }
 
@@ -157,6 +183,9 @@ impl Recorder {
             counters: Mutex::new(BTreeMap::new()),
             gauges: Mutex::new(BTreeMap::new()),
             epochs: Mutex::new(Vec::new()),
+            worker_busy: Mutex::new(Vec::new()),
+            fork_joins: AtomicU64::new(0),
+            lock_wait_ns: AtomicU64::new(0),
             sink,
         }
     }
@@ -184,9 +213,12 @@ impl Recorder {
             return; // paused section (finetune): nothing was sampled
         }
         if self.log_every > 0 && count as u64 % self.log_every == 0 {
+            let imb = self.worker_imbalance_pct();
+            let lw = self.lock_wait_ms();
             eprintln!(
                 "[obs] step={count} last_ms={last_ms:.2} \
-                 mean_ms={mean_ms:.2}"
+                 mean_ms={mean_ms:.2} imbalance={imb:.1}% \
+                 lock_wait_ms={lw:.1}"
             );
         }
     }
@@ -229,6 +261,64 @@ impl Recorder {
         if self.enabled {
             self.cur_step.store(step, Ordering::Relaxed);
         }
+    }
+
+    /// Tag this thread's trace spans with `worker` until the returned
+    /// guard drops (the fork-join compute region). Inert when disabled.
+    pub fn worker_scope(&self, worker: usize) -> WorkerScope {
+        if !self.enabled {
+            return WorkerScope { prev: None };
+        }
+        let prev = WORKER.with(|w| {
+            let p = w.get();
+            w.set(worker as i64);
+            p
+        });
+        WorkerScope { prev: Some(prev) }
+    }
+
+    /// Record one fork-join region's per-worker busy times (ns, indexed
+    /// by worker id). Accumulates the run-wide per-worker busy totals
+    /// behind [`Recorder::worker_busy_ms`] / the imbalance gauge.
+    pub fn record_fork_join(&self, busy_ns: &[u64]) {
+        if !self.enabled || busy_ns.is_empty() {
+            return;
+        }
+        let mut busy = self.worker_busy.lock().unwrap();
+        if busy.len() < busy_ns.len() {
+            busy.resize(busy_ns.len(), 0);
+        }
+        for (total, &ns) in busy.iter_mut().zip(busy_ns) {
+            *total += ns;
+        }
+        self.fork_joins.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Cumulative per-worker compute busy time, ms, indexed by worker id.
+    pub fn worker_busy_ms(&self) -> Vec<f64> {
+        self.worker_busy
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|&ns| ns as f64 / 1e6)
+            .collect()
+    }
+
+    /// Fork-join imbalance over the cumulative per-worker busy times.
+    pub fn worker_imbalance_pct(&self) -> f64 {
+        imbalance_pct(&self.worker_busy_ms())
+    }
+
+    /// Latest cumulative lock-wait total (pushed by the trainer from the
+    /// engine / fill-cache timed locks each step).
+    pub fn set_lock_wait_ns(&self, ns: u64) {
+        if self.enabled {
+            self.lock_wait_ns.store(ns, Ordering::Relaxed);
+        }
+    }
+
+    pub fn lock_wait_ms(&self) -> f64 {
+        self.lock_wait_ns.load(Ordering::Relaxed) as f64 / 1e6
     }
 
     /// RAII phase timer; returns an inert guard when disabled. Guards
@@ -277,7 +367,9 @@ impl Recorder {
     }
 
     /// Record one epoch's staleness snapshot (also emitted as a trace
-    /// point when a sink is attached).
+    /// point when a sink is attached, together with an `epoch_sed` point
+    /// carrying the cumulative SED counters so trace analysis can
+    /// compute per-epoch drop-rate drift).
     pub fn record_epoch(&self, stats: EpochStats) {
         if !self.enabled {
             return;
@@ -288,6 +380,20 @@ impl Recorder {
                 ("epoch", Json::num(stats.epoch as f64)),
                 ("coverage", Json::num(stats.coverage)),
                 ("mean", Json::num(stats.mean_staleness)),
+            ]),
+        );
+        self.point(
+            "epoch_sed",
+            Json::obj(vec![
+                ("epoch", Json::num(stats.epoch as f64)),
+                (
+                    "stale_total",
+                    Json::num(self.counter("sed_stale_total") as f64),
+                ),
+                (
+                    "stale_dropped",
+                    Json::num(self.counter("sed_stale_dropped") as f64),
+                ),
             ]),
         );
         self.epochs.lock().unwrap().push(stats);
@@ -316,6 +422,21 @@ impl Recorder {
     }
 }
 
+/// RAII guard from [`Recorder::worker_scope`]: restores the thread's
+/// previous worker tag on drop (scopes nest, e.g. the inline
+/// single-worker fast path running on the coordinator thread).
+pub struct WorkerScope {
+    prev: Option<i64>,
+}
+
+impl Drop for WorkerScope {
+    fn drop(&mut self) {
+        if let Some(prev) = self.prev {
+            WORKER.with(|w| w.set(prev));
+        }
+    }
+}
+
 /// RAII guard from [`Recorder::span`]: measures wall-clock from creation
 /// to drop and attributes it to the span's phase.
 pub struct Span<'a> {
@@ -341,14 +462,19 @@ impl Drop for Span<'_> {
             let step = s.rec.cur_step.load(Ordering::Relaxed);
             let t_us =
                 s.start.duration_since(s.rec.t0).as_micros() as f64;
-            sink.write(&Json::obj(vec![
+            let mut fields = vec![
                 ("ev", Json::str("span")),
                 ("phase", Json::str(s.phase.name())),
                 ("step", Json::num(step as f64)),
                 ("t_us", Json::num(t_us)),
                 ("dur_us", Json::num(ns as f64 / 1e3)),
                 ("depth", Json::num(s.depth as f64)),
-            ]));
+            ];
+            let worker = WORKER.with(|w| w.get());
+            if worker >= 0 {
+                fields.push(("worker", Json::num(worker as f64)));
+            }
+            sink.write(&Json::obj(fields));
         }
     }
 }
@@ -410,6 +536,70 @@ mod tests {
         let grad_ms = j.at("grad").at("total_ms").as_f64().unwrap();
         // the outer span covers both inner ones
         assert!(step_ms >= fill_ms + grad_ms);
+    }
+
+    #[test]
+    fn imbalance_formula_edge_cases() {
+        assert_eq!(imbalance_pct(&[]), 0.0);
+        assert_eq!(imbalance_pct(&[5.0]), 0.0);
+        assert_eq!(imbalance_pct(&[3.0, 3.0]), 0.0);
+        assert_eq!(imbalance_pct(&[0.0, 0.0]), 0.0);
+        // one worker idle: mean = max/2 -> 50%
+        assert!((imbalance_pct(&[4.0, 0.0]) - 50.0).abs() < 1e-12);
+        // 2100 vs 1650 us -> 100 * (1 - 1875/2100)
+        let v = imbalance_pct(&[2.1, 1.65]);
+        assert!((v - 100.0 * (1.0 - 1.875 / 2.1)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fork_join_accumulates_per_worker_busy() {
+        let r = Recorder::new(&ObsConfig {
+            record: true,
+            ..ObsConfig::default()
+        })
+        .unwrap();
+        r.record_fork_join(&[3_000_000, 1_000_000]);
+        r.record_fork_join(&[1_000_000, 1_000_000]);
+        let busy = r.worker_busy_ms();
+        assert_eq!(busy.len(), 2);
+        assert!((busy[0] - 4.0).abs() < 1e-9);
+        assert!((busy[1] - 2.0).abs() < 1e-9);
+        // cumulative: mean 3, max 4 -> 25%
+        assert!((r.worker_imbalance_pct() - 25.0).abs() < 1e-9);
+        let j = r.workers_json();
+        assert_eq!(j.at("count").as_f64(), Some(2.0));
+        assert_eq!(j.at("fork_joins").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn disabled_recorder_ignores_worker_telemetry() {
+        let r = Recorder::disabled();
+        let _scope = r.worker_scope(3);
+        r.record_fork_join(&[1_000, 2_000]);
+        r.set_lock_wait_ns(5_000_000);
+        assert!(r.worker_busy_ms().is_empty());
+        assert_eq!(r.worker_imbalance_pct(), 0.0);
+        assert_eq!(r.lock_wait_ms(), 0.0);
+    }
+
+    #[test]
+    fn worker_scopes_nest_and_restore() {
+        let r = Recorder::new(&ObsConfig {
+            record: true,
+            ..ObsConfig::default()
+        })
+        .unwrap();
+        assert_eq!(WORKER.with(|w| w.get()), -1);
+        {
+            let _outer = r.worker_scope(0);
+            assert_eq!(WORKER.with(|w| w.get()), 0);
+            {
+                let _inner = r.worker_scope(2);
+                assert_eq!(WORKER.with(|w| w.get()), 2);
+            }
+            assert_eq!(WORKER.with(|w| w.get()), 0);
+        }
+        assert_eq!(WORKER.with(|w| w.get()), -1);
     }
 
     #[test]

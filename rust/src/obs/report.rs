@@ -86,6 +86,28 @@ impl Recorder {
         )
     }
 
+    /// Worker-attribution section (`gst-run-report/v2`): cumulative
+    /// per-worker compute busy time, fork-join count and the imbalance
+    /// gauge. An empty run (or a disabled recorder) reports zero workers.
+    pub fn workers_json(&self) -> Json {
+        let busy = self.worker_busy_ms();
+        Json::obj(vec![
+            ("count", Json::num(busy.len() as f64)),
+            (
+                "fork_joins",
+                Json::num(self.fork_joins.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "busy_ms",
+                Json::arr(busy.iter().map(|&ms| Json::num(ms))),
+            ),
+            (
+                "imbalance_pct",
+                Json::num(super::imbalance_pct(&busy)),
+            ),
+        ])
+    }
+
     /// Step wall-clock stats; the first `warmup` samples are excluded
     /// from the steady-state mean (Table 3 skips the cold first epoch).
     pub fn steps_json(&self, warmup: usize) -> Json {

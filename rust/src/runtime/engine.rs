@@ -7,10 +7,12 @@
 //! state owner, which is what lets it average gradients across data-parallel
 //! workers and write embeddings into the table.
 //!
-//! `Engine` is `Sync`: the executable cache is behind an `RwLock` (writes
-//! only on first compile; every steady-state call takes the read lock) and
-//! the call counters behind a `Mutex`, so `GstCore`'s worker threads execute
-//! micro-batches through one shared engine concurrently.
+//! `Engine` is `Sync`: the executable cache is behind a [`TimedRwLock`]
+//! (writes only on first compile; every steady-state call takes the read
+//! lock) and the call counters behind a [`TimedMutex`], so `GstCore`'s
+//! worker threads execute micro-batches through one shared engine
+//! concurrently — and [`Engine::lock_stats`] reports how long they
+//! actually blocked on each other doing it.
 //!
 //! The engine also caches marshalled **parameter literals** per
 //! [`ParamStore`] (keyed by [`ParamStore::cache_key`]): the dozens of
@@ -22,10 +24,11 @@
 use super::manifest::{Dtype, FnSpec, Manifest, TensorSpec};
 use super::params::ParamStore;
 use crate::metrics::CacheStats;
+use crate::util::sync::{LockStats, TimedMutex, TimedRwLock};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// A host-side tensor heading into (or out of) an executable.
@@ -109,16 +112,16 @@ pub struct Engine {
     pub manifest: Manifest,
     dir: String,
     client: xla::PjRtClient,
-    exes: RwLock<HashMap<String, xla::PjRtLoadedExecutable>>,
+    exes: TimedRwLock<HashMap<String, xla::PjRtLoadedExecutable>>,
     /// cumulative executions + wall-clock per function (observability
     /// and perf accounting)
-    calls: Mutex<HashMap<String, CallStat>>,
+    calls: TimedMutex<HashMap<String, CallStat>>,
     /// cumulative bytes marshalled into input literals (positional
     /// inputs + parameter-literal rebuilds)
     marshal_bytes: AtomicU64,
     /// marshalled parameter literals per store id, tagged with the store
     /// generation they were built from
-    param_lits: RwLock<HashMap<u64, ParamLitEntry>>,
+    param_lits: TimedRwLock<HashMap<u64, ParamLitEntry>>,
     param_hits: AtomicU64,
     param_misses: AtomicU64,
 }
@@ -133,10 +136,10 @@ impl Engine {
             manifest,
             dir: dir.to_string(),
             client,
-            exes: RwLock::new(HashMap::new()),
-            calls: Mutex::new(HashMap::new()),
+            exes: TimedRwLock::new(HashMap::new()),
+            calls: TimedMutex::new(HashMap::new()),
             marshal_bytes: AtomicU64::new(0),
-            param_lits: RwLock::new(HashMap::new()),
+            param_lits: TimedRwLock::new(HashMap::new()),
             param_hits: AtomicU64::new(0),
             param_misses: AtomicU64::new(0),
         })
@@ -145,7 +148,7 @@ impl Engine {
     /// Compile (and cache) one function's HLO text. Racing threads may
     /// both compile; the first insert wins and the duplicate is dropped.
     fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.exes.read().expect("exes lock").contains_key(name) {
+        if self.exes.read().contains_key(name) {
             return Ok(());
         }
         let spec = self.manifest.func(name)?;
@@ -157,11 +160,7 @@ impl Engine {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        self.exes
-            .write()
-            .expect("exes lock")
-            .entry(name.to_string())
-            .or_insert(exe);
+        self.exes.write().entry(name.to_string()).or_insert(exe);
         Ok(())
     }
 
@@ -248,8 +247,7 @@ impl Engine {
         ps: &ParamStore,
     ) -> Result<Arc<Vec<xla::Literal>>> {
         let (id, gen) = ps.cache_key();
-        if let Some((cached_gen, lits)) =
-            self.param_lits.read().expect("param lits lock").get(&id)
+        if let Some((cached_gen, lits)) = self.param_lits.read().get(&id)
         {
             if *cached_gen == gen && lits.len() == ps.values.len() {
                 self.param_hits.fetch_add(1, Ordering::Relaxed);
@@ -264,10 +262,7 @@ impl Engine {
             lits.push(marshal(name, ispec, &HostArg::F32(v))?);
         }
         let lits = Arc::new(lits);
-        self.param_lits
-            .write()
-            .expect("param lits lock")
-            .insert(id, (gen, lits.clone()));
+        self.param_lits.write().insert(id, (gen, lits.clone()));
         Ok(lits)
     }
 
@@ -279,14 +274,10 @@ impl Engine {
         spec: &FnSpec,
         literals: &[&xla::Literal],
     ) -> Result<Vec<HostTensor>> {
-        self.calls
-            .lock()
-            .expect("calls lock")
-            .entry(name.to_string())
-            .or_default()
-            .count += 1;
+        self.calls.lock().entry(name.to_string()).or_default().count +=
+            1;
         let t0 = Instant::now();
-        let exes = self.exes.read().expect("exes lock");
+        let exes = self.exes.read();
         let exe = exes.get(name).expect("ensured above");
         let result = exe
             .execute::<&xla::Literal>(literals)
@@ -328,12 +319,7 @@ impl Engine {
             out.push(t);
         }
         let ns = t0.elapsed().as_nanos() as u64;
-        self.calls
-            .lock()
-            .expect("calls lock")
-            .entry(name.to_string())
-            .or_default()
-            .ns += ns;
+        self.calls.lock().entry(name.to_string()).or_default().ns += ns;
         Ok(out)
     }
 
@@ -341,7 +327,6 @@ impl Engine {
     pub fn call_counts(&self) -> HashMap<String, usize> {
         self.calls
             .lock()
-            .expect("calls lock")
             .iter()
             .map(|(k, s)| (k.clone(), s.count))
             .collect()
@@ -352,10 +337,24 @@ impl Engine {
     pub fn call_ms(&self) -> HashMap<String, f64> {
         self.calls
             .lock()
-            .expect("calls lock")
             .iter()
             .map(|(k, s)| (k.clone(), s.ns as f64 / 1e6))
             .collect()
+    }
+
+    /// Contention counters of every engine-internal lock, keyed for the
+    /// run report's `contention` section.
+    pub fn lock_stats(&self) -> Vec<(String, LockStats)> {
+        vec![
+            ("engine.exes".to_string(), self.exes.stats()),
+            ("engine.calls".to_string(), self.calls.stats()),
+            ("engine.param_lits".to_string(), self.param_lits.stats()),
+        ]
+    }
+
+    /// Total blocked lock-wait across the engine's locks, in ns.
+    pub fn lock_wait_ns(&self) -> u64 {
+        self.lock_stats().iter().map(|(_, s)| s.wait_ns).sum()
     }
 
     /// Total bytes marshalled into input literals (positional inputs

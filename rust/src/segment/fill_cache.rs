@@ -12,12 +12,14 @@
 //! parameters never depend on the budget (`cfg.fill_cache_mb`). Hit/miss
 //! counters surface through [`CacheStats`].
 //!
-//! Interior mutability (one `Mutex`) keeps `get`/`put` callable from the
-//! read-only task fill hooks that run concurrently on worker threads.
+//! Interior mutability (one [`TimedMutex`]) keeps `get`/`put` callable
+//! from the read-only task fill hooks that run concurrently on worker
+//! threads; the mutex doubles as the cache's contention probe
+//! ([`FillCache::lock_stats`]).
 
 use crate::metrics::CacheStats;
+use crate::util::sync::{LockStats, TimedMutex};
 use std::collections::HashMap;
-use std::sync::Mutex;
 
 /// Fixed-block-size cache keyed by an opaque `u64` (tasks encode their
 /// (row, segment) identity into it).
@@ -27,7 +29,7 @@ pub struct FillCache {
     mask_len: usize,
     /// max entries the byte budget holds
     capacity: usize,
-    inner: Mutex<Inner>,
+    inner: TimedMutex<Inner>,
 }
 
 struct Inner {
@@ -63,7 +65,7 @@ impl FillCache {
             adj_len,
             mask_len,
             capacity,
-            inner: Mutex::new(Inner {
+            inner: TimedMutex::new(Inner {
                 map: HashMap::new(),
                 keys: Vec::new(),
                 refbit: Vec::new(),
@@ -88,7 +90,7 @@ impl FillCache {
         adj_out: &mut [f32],
         mask_out: &mut [f32],
     ) -> bool {
-        let mut inner = self.inner.lock().expect("fill cache lock");
+        let mut inner = self.inner.lock();
         let Some(&slot) = inner.map.get(&key) else {
             inner.misses += 1;
             return false;
@@ -117,7 +119,7 @@ impl FillCache {
         assert_eq!(adj.len(), self.adj_len);
         assert_eq!(mask.len(), self.mask_len);
         let block = self.block();
-        let mut inner = self.inner.lock().expect("fill cache lock");
+        let mut inner = self.inner.lock();
         let slot = if let Some(&s) = inner.map.get(&key) {
             s
         } else if inner.keys.len() < self.capacity {
@@ -156,7 +158,7 @@ impl FillCache {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().expect("fill cache lock").keys.len()
+        self.inner.lock().keys.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -170,8 +172,13 @@ impl FillCache {
 
     /// Cumulative hit/miss counters.
     pub fn stats(&self) -> CacheStats {
-        let inner = self.inner.lock().expect("fill cache lock");
+        let inner = self.inner.lock();
         CacheStats { hits: inner.hits, misses: inner.misses }
+    }
+
+    /// Contention counters of the cache's internal lock.
+    pub fn lock_stats(&self) -> LockStats {
+        self.inner.stats()
     }
 }
 

@@ -41,9 +41,11 @@ use crate::sed;
 use crate::table::EmbeddingTable;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
+use crate::util::sync::LockStats;
 use crate::util::threads;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+use std::time::Instant;
 
 /// One micro-batch slot, described by the task during the plan phase.
 #[derive(Clone, Debug)]
@@ -180,6 +182,13 @@ pub trait GstTask: Sync {
         0
     }
 
+    /// Contention counters of task-owned locks (name → stats), merged
+    /// into the run report's `contention` section under a `task.`
+    /// prefix. Default: no task-side locks.
+    fn contention(&self) -> Vec<(String, LockStats)> {
+        Vec::new()
+    }
+
     /// Full Graph Training baseline epoch. Default: unsupported (tasks
     /// whose constructor rejects `Method::FullGraph` never reach this).
     fn full_graph_epoch(&mut self, _env: &mut CoreEnv<'_>) -> Result<()> {
@@ -268,6 +277,10 @@ pub struct GstCore<'a, T: GstTask> {
     bufs: Vec<BatchBufs>,
     /// in-place gradient reducer, reused across every optimizer group
     accum: GradAccum,
+    /// cumulative wall-clock of the serial table write-back loop (ns) —
+    /// the commit path holds no lock (it has `&mut` on the table), so
+    /// its cost is measured directly rather than through a timed lock
+    table_writeback_ns: u64,
 }
 
 impl<'a, T: GstTask> GstCore<'a, T> {
@@ -327,6 +340,7 @@ impl<'a, T: GstTask> GstCore<'a, T> {
             obs,
             bufs,
             accum: GradAccum::new(&eng.manifest),
+            table_writeback_ns: 0,
         })
     }
 
@@ -479,9 +493,40 @@ impl<'a, T: GstTask> GstCore<'a, T> {
         });
     }
 
-    /// Assemble the `gst-run-report/v1` document: run context plus every
-    /// recorder view plus engine-side accounting. Built for every run —
-    /// with the recorder disabled the telemetry sections are just empty.
+    /// Contention section of the run report: per-lock wait/acquisition
+    /// counters from the engine's and the task's timed locks, their
+    /// total, and the serial table write-back cost (the one serial
+    /// region the commit phase can't parallelize away).
+    fn contention_json(&self) -> Json {
+        let mut entries = self.eng.lock_stats();
+        for (name, s) in self.task.contention() {
+            entries.push((format!("task.{name}"), s));
+        }
+        let total_ms: f64 =
+            entries.iter().map(|(_, s)| s.wait_ms()).sum();
+        Json::obj(vec![
+            (
+                "locks",
+                Json::Obj(
+                    entries
+                        .into_iter()
+                        .map(|(k, s)| (k, s.to_json()))
+                        .collect(),
+                ),
+            ),
+            ("total_wait_ms", Json::num(total_ms)),
+            (
+                "table_writeback_ms",
+                Json::num(self.table_writeback_ns as f64 / 1e6),
+            ),
+        ])
+    }
+
+    /// Assemble the `gst-run-report/v2` document: run context plus every
+    /// recorder view plus engine-side accounting (v2 adds the `workers`
+    /// and `contention` sections; every v1 field is unchanged). Built
+    /// for every run — with the recorder disabled the telemetry
+    /// sections are just empty.
     fn build_report(
         &self,
         train_metric: f64,
@@ -507,7 +552,7 @@ impl<'a, T: GstTask> GstCore<'a, T> {
                 .collect(),
         );
         Json::obj(vec![
-            ("schema", Json::str("gst-run-report/v1")),
+            ("schema", Json::str("gst-run-report/v2")),
             ("method", Json::str(cfg.method.name())),
             ("dataset", Json::str(&m.dataset)),
             ("backbone", Json::str(&m.backbone)),
@@ -542,6 +587,8 @@ impl<'a, T: GstTask> GstCore<'a, T> {
             ("curve", curve.to_json()),
             ("steps", self.obs.steps_json(self.first_epoch_steps)),
             ("phases", self.obs.phases_json()),
+            ("workers", self.obs.workers_json()),
+            ("contention", self.contention_json()),
             ("staleness", self.obs.staleness_json()),
             ("sed", self.obs.sed_json()),
             (
@@ -663,7 +710,11 @@ impl<'a, T: GstTask> GstCore<'a, T> {
         let ranges_ref = &ranges;
         let worker_out =
             threads::fork_join_with(&mut self.bufs[..nworkers], |w, wb| {
-                ranges_ref[w]
+                // tag this worker's spans and time its busy interval —
+                // the raw material for the imbalance gauge
+                let _scope = obs.worker_scope(w);
+                let t0 = Instant::now();
+                let out = ranges_ref[w]
                     .clone()
                     .map(|pi| {
                         compute_step(
@@ -675,10 +726,16 @@ impl<'a, T: GstTask> GstCore<'a, T> {
                             obs,
                         )
                     })
-                    .collect::<Result<Vec<StepResult>>>()
+                    .collect::<Result<Vec<StepResult>>>();
+                (out, t0.elapsed().as_nanos() as u64)
             });
+        // record every worker's busy time before error propagation, so a
+        // failing step still leaves consistent telemetry behind
+        let busy: Vec<u64> =
+            worker_out.iter().map(|(_, ns)| *ns).collect();
+        self.obs.record_fork_join(&busy);
         let mut results: Vec<StepResult> = Vec::with_capacity(plans.len());
-        for r in worker_out {
+        for (r, _) in worker_out {
             results.extend(r?);
         }
 
@@ -688,6 +745,7 @@ impl<'a, T: GstTask> GstCore<'a, T> {
         // the workers join.
         {
             let _commit = self.obs.span(Phase::TableCommit);
+            let t0 = Instant::now();
             for (plan, res) in plans.iter().zip(&results) {
                 commit_step(
                     &mut self.table,
@@ -697,12 +755,25 @@ impl<'a, T: GstTask> GstCore<'a, T> {
                     td,
                 );
             }
+            self.table_writeback_ns +=
+                t0.elapsed().as_nanos() as u64;
             for res in &results {
                 self.accum.add(&res.grads);
             }
             let lr = effective_lr(&self.cfg, eng);
             let avg = self.accum.mean();
             ops::apply(eng, &mut self.ps, avg, lr)?;
+        }
+        // refresh the cumulative lock-wait total for the heartbeat line
+        // and the report (engine caches + any task-owned locks)
+        if self.obs.is_enabled() {
+            let task_wait: u64 = self
+                .task
+                .contention()
+                .iter()
+                .map(|(_, s)| s.wait_ns)
+                .sum();
+            self.obs.set_lock_wait_ns(eng.lock_wait_ns() + task_wait);
         }
         self.step += plans.len() as u32;
         self.obs.step_stop();

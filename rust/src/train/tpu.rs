@@ -24,6 +24,7 @@ use crate::metrics::{self, CacheStats};
 use crate::runtime::{Engine, ParamStore};
 use crate::segment::{FillCache, PreparedSegments, SegmentedGraph};
 use crate::util::rng::Pcg64;
+use crate::util::sync::LockStats;
 use anyhow::{bail, Result};
 
 /// The TpuGraphs trainer is the shared core driving a [`TpuTask`].
@@ -360,5 +361,12 @@ impl GstTask for TpuTask<'_> {
 
     fn fill_cache_bytes(&self) -> usize {
         self.fill_cache.as_ref().map(|c| c.bytes()).unwrap_or(0)
+    }
+
+    fn contention(&self) -> Vec<(String, LockStats)> {
+        self.fill_cache
+            .as_ref()
+            .map(|c| vec![("fill_cache".to_string(), c.lock_stats())])
+            .unwrap_or_default()
     }
 }

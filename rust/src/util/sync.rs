@@ -1,0 +1,246 @@
+//! Contention-aware lock wrappers (`TimedMutex`, `TimedRwLock`).
+//!
+//! The GST compute phase shares a handful of locks across worker
+//! threads — the engine's executable/parameter-literal caches, its call
+//! counters, and the fill-block cache. These wrappers make that
+//! contention *measurable*: every acquisition first tries the lock
+//! without blocking (the steady-state fast path costs two relaxed
+//! atomic increments), and only a failed try falls back to a timed
+//! blocking acquire, accumulating the wait into [`LockStats`].
+//!
+//! Telemetry-only by construction: the wrappers never change locking
+//! semantics (same poisoning behavior, same guards), so wrapping a lock
+//! can never change trained parameters — only explain where the wall
+//! clock went.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{
+    Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    TryLockError,
+};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Cumulative contention counters of one lock.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LockStats {
+    /// Total time spent blocked waiting for the lock, in ns.
+    pub wait_ns: u64,
+    /// Total acquisitions (fast path + contended).
+    pub acquisitions: u64,
+    /// Acquisitions that found the lock held and had to block.
+    pub contended: u64,
+}
+
+impl LockStats {
+    pub fn wait_ms(&self) -> f64 {
+        self.wait_ns as f64 / 1e6
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("wait_ms", Json::num(self.wait_ms())),
+            ("acquisitions", Json::num(self.acquisitions as f64)),
+            ("contended", Json::num(self.contended as f64)),
+        ])
+    }
+}
+
+/// Shared counter cell (one per wrapped lock).
+#[derive(Default)]
+struct Counters {
+    wait_ns: AtomicU64,
+    acquisitions: AtomicU64,
+    contended: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> LockStats {
+        LockStats {
+            wait_ns: self.wait_ns.load(Ordering::Relaxed),
+            acquisitions: self.acquisitions.load(Ordering::Relaxed),
+            contended: self.contended.load(Ordering::Relaxed),
+        }
+    }
+
+    fn blocked(&self, waited: Instant) {
+        self.contended.fetch_add(1, Ordering::Relaxed);
+        self.wait_ns.fetch_add(
+            waited.elapsed().as_nanos() as u64,
+            Ordering::Relaxed,
+        );
+    }
+}
+
+/// `Mutex` that counts acquisitions and accumulates blocked wait time.
+pub struct TimedMutex<T> {
+    inner: Mutex<T>,
+    counters: Counters,
+}
+
+impl<T> TimedMutex<T> {
+    pub fn new(value: T) -> TimedMutex<T> {
+        TimedMutex { inner: Mutex::new(value), counters: Counters::default() }
+    }
+
+    /// Acquire the lock; panics on poison (matching the bare
+    /// `.lock().expect(...)` idiom this wrapper replaces).
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        self.counters.acquisitions.fetch_add(1, Ordering::Relaxed);
+        match self.inner.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                let t0 = Instant::now();
+                let g = self.inner.lock().expect("timed mutex poisoned");
+                self.counters.blocked(t0);
+                g
+            }
+            Err(TryLockError::Poisoned(_)) => {
+                panic!("timed mutex poisoned")
+            }
+        }
+    }
+
+    /// Cumulative contention counters since construction.
+    pub fn stats(&self) -> LockStats {
+        self.counters.snapshot()
+    }
+}
+
+/// `RwLock` counterpart: reads and writes share one counter set (the
+/// interesting signal is total blocked time, not the read/write split).
+pub struct TimedRwLock<T> {
+    inner: RwLock<T>,
+    counters: Counters,
+}
+
+impl<T> TimedRwLock<T> {
+    pub fn new(value: T) -> TimedRwLock<T> {
+        TimedRwLock {
+            inner: RwLock::new(value),
+            counters: Counters::default(),
+        }
+    }
+
+    pub fn read(&self) -> RwLockReadGuard<'_, T> {
+        self.counters.acquisitions.fetch_add(1, Ordering::Relaxed);
+        match self.inner.try_read() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                let t0 = Instant::now();
+                let g = self.inner.read().expect("timed rwlock poisoned");
+                self.counters.blocked(t0);
+                g
+            }
+            Err(TryLockError::Poisoned(_)) => {
+                panic!("timed rwlock poisoned")
+            }
+        }
+    }
+
+    pub fn write(&self) -> RwLockWriteGuard<'_, T> {
+        self.counters.acquisitions.fetch_add(1, Ordering::Relaxed);
+        match self.inner.try_write() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                let t0 = Instant::now();
+                let g = self.inner.write().expect("timed rwlock poisoned");
+                self.counters.blocked(t0);
+                g
+            }
+            Err(TryLockError::Poisoned(_)) => {
+                panic!("timed rwlock poisoned")
+            }
+        }
+    }
+
+    pub fn stats(&self) -> LockStats {
+        self.counters.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uncontended_lock_counts_without_waiting() {
+        let m = TimedMutex::new(0usize);
+        for _ in 0..3 {
+            *m.lock() += 1;
+        }
+        let s = m.stats();
+        assert_eq!(*m.lock(), 3);
+        assert_eq!(s.acquisitions, 3);
+        assert_eq!(s.contended, 0);
+        assert_eq!(s.wait_ns, 0);
+    }
+
+    #[test]
+    fn contended_lock_records_wait_time() {
+        let m = TimedMutex::new(());
+        std::thread::scope(|scope| {
+            let g = m.lock();
+            let t = scope.spawn(|| {
+                // blocks until the holder drops its guard
+                drop(m.lock());
+            });
+            // acquisitions increments before the try, so once it reads 2
+            // the spawned thread is at (or past) its failing try_lock
+            while m.stats().acquisitions < 2 {
+                std::thread::yield_now();
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            drop(g);
+            t.join().unwrap();
+        });
+        let s = m.stats();
+        assert_eq!(s.acquisitions, 2);
+        assert_eq!(s.contended, 1);
+        assert!(s.wait_ns > 0, "blocked acquire recorded no wait");
+        assert!(s.wait_ms() > 0.0);
+    }
+
+    #[test]
+    fn rwlock_counts_reads_and_writes() {
+        let l = TimedRwLock::new(5usize);
+        assert_eq!(*l.read(), 5);
+        *l.write() = 7;
+        assert_eq!(*l.read(), 7);
+        let s = l.stats();
+        assert_eq!(s.acquisitions, 3);
+        assert_eq!(s.contended, 0);
+    }
+
+    #[test]
+    fn rwlock_write_blocked_by_reader_is_contended() {
+        let l = TimedRwLock::new(0usize);
+        std::thread::scope(|scope| {
+            let g = l.read();
+            let t = scope.spawn(|| {
+                *l.write() = 1;
+            });
+            while l.stats().acquisitions < 2 {
+                std::thread::yield_now();
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            drop(g);
+            t.join().unwrap();
+        });
+        let s = l.stats();
+        assert_eq!(s.acquisitions, 2);
+        assert_eq!(s.contended, 1);
+        assert!(s.wait_ns > 0);
+        assert_eq!(*l.read(), 1);
+    }
+
+    #[test]
+    fn stats_serialize_to_json() {
+        let s = LockStats { wait_ns: 2_000_000, acquisitions: 9, contended: 1 };
+        let j = s.to_json();
+        assert_eq!(j.at("wait_ms").as_f64(), Some(2.0));
+        assert_eq!(j.at("acquisitions").as_f64(), Some(9.0));
+        assert_eq!(j.at("contended").as_f64(), Some(1.0));
+    }
+}

@@ -10,6 +10,7 @@
 //! parameters** after training.
 
 use gst::datasets::{MalnetDataset, MalnetSplit, TpuDataset};
+use gst::obs::analyze;
 use gst::obs::ObsConfig;
 use gst::runtime::Engine;
 use gst::train::{MalnetTrainer, Method, TpuTrainer, TrainConfig};
@@ -201,7 +202,7 @@ fn observability_sinks_never_change_parameters() {
     // both runs carry a complete report document; the enabled run fills
     // the telemetry sections
     let rep = &r1.report;
-    assert_eq!(rep.at("schema").as_str(), Some("gst-run-report/v1"));
+    assert_eq!(rep.at("schema").as_str(), Some("gst-run-report/v2"));
     let phases = rep.at("phases").as_obj().unwrap();
     for key in [
         "step", "sample", "fill", "embed_fwd", "grad", "table_commit",
@@ -243,4 +244,66 @@ fn observability_sinks_never_change_parameters() {
     }
     assert!(spans > 0, "no span events in the trace");
     let _ = std::fs::remove_file(&trace);
+}
+
+#[test]
+fn worker_contention_telemetry_is_execution_only() {
+    let Some(d) = dir("malnet_sage_n128") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let eng = Engine::open(&d).unwrap();
+    let data = MalnetDataset::generate(MalnetSplit::Tiny, 40, 3);
+    // worker attribution, the imbalance gauge, timed locks and the
+    // lock-wait heartbeat all ride the parallel path: the telemetry run
+    // uses 4 workers + a fill cache and must still train the exact
+    // parameters of the silent single-worker run
+    let run = |workers: usize, record: bool| {
+        let mut c = cfg(Method::GstED, workers);
+        c.fill_cache_mb = 16;
+        c.obs = ObsConfig { record, ..ObsConfig::default() };
+        let mut tr = MalnetTrainer::new(&eng, &data, c).unwrap();
+        let res = tr.train().unwrap();
+        (tr.ps.values.clone(), tr.ps.m.clone(), res)
+    };
+    let (p0, m0, _) = run(1, false);
+    let (p4, m4, r4) = run(4, true);
+    assert_eq!(p0, p4, "parameters diverge with telemetry + workers");
+    assert_eq!(m0, m4, "Adam moments diverge with telemetry + workers");
+
+    // the v2 report carries populated worker + contention sections
+    let rep = &r4.report;
+    let workers = rep.at("workers");
+    assert_eq!(workers.at("count").as_f64(), Some(4.0));
+    assert!(workers.at("fork_joins").as_f64().unwrap() > 0.0);
+    assert_eq!(workers.at("busy_ms").as_arr().unwrap().len(), 4);
+    let imb = workers.at("imbalance_pct").as_f64().unwrap();
+    assert!((0.0..=100.0).contains(&imb), "imbalance {imb}");
+    let contention = rep.at("contention");
+    let locks = contention.at("locks").as_obj().unwrap();
+    for key in ["engine.exes", "engine.calls", "engine.param_lits"] {
+        assert!(locks.contains_key(key), "missing lock `{key}`");
+    }
+    assert!(
+        locks["engine.calls"].at("acquisitions").as_f64().unwrap()
+            > 0.0
+    );
+    assert!(
+        locks["task.fill_cache"].at("acquisitions").as_f64().unwrap()
+            > 0.0
+    );
+    assert!(contention.at("total_wait_ms").as_f64().unwrap() >= 0.0);
+    assert!(
+        contention.at("table_writeback_ms").as_f64().unwrap() > 0.0
+    );
+
+    // the analytics layer consumes the real report end-to-end: the
+    // reader accepts it and a self-diff reports zero regressions
+    let analysis = analyze::analyze_report(rep).unwrap();
+    assert_eq!(
+        analysis.at("source_schema").as_str(),
+        Some("gst-run-report/v2")
+    );
+    let diff = analyze::diff_reports(rep, rep, 20.0).unwrap();
+    assert_eq!(diff.at("pass").as_bool(), Some(true));
 }

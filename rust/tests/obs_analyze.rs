@@ -1,0 +1,150 @@
+//! Golden tests for the trace/report analytics layer (`obs::analyze`)
+//! over the committed fixture `tests/fixtures/trace_small.jsonl` — a
+//! hand-written 3-step, 2-worker trace whose every aggregate is known in
+//! closed form — plus gate tests over the committed CI baseline.
+
+use gst::obs::analyze::{analyze_trace, diff_reports};
+use gst::util::json::Json;
+
+fn fixture() -> String {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/trace_small.jsonl"
+    );
+    std::fs::read_to_string(path).expect("fixture trace")
+}
+
+fn baseline() -> Json {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/baselines/report_baseline.json"
+    );
+    let text = std::fs::read_to_string(path).expect("committed baseline");
+    Json::parse(&text).expect("baseline parses")
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() < 1e-9
+}
+
+#[test]
+fn trace_analysis_matches_the_golden_fixture() {
+    let a = analyze_trace(&fixture(), 2).unwrap();
+    assert_eq!(a.at("schema").as_str(), Some("gst-trace-analysis/v1"));
+    // 28 spans (3 steps × 9 + one eval), 4 points
+    assert_eq!(a.at("events").at("spans").as_f64(), Some(28.0));
+    assert_eq!(a.at("events").at("points").as_f64(), Some(4.0));
+
+    // step wall-clock: 1.0, 1.1, 0.95 ms
+    let steps = a.at("steps");
+    assert_eq!(steps.at("count").as_f64(), Some(3.0));
+    assert!(close(steps.at("total_ms").as_f64().unwrap(), 3.05));
+    assert!(close(steps.at("p50_ms").as_f64().unwrap(), 1.0));
+    assert!(close(steps.at("p95_ms").as_f64().unwrap(), 1.09));
+    assert!(close(steps.at("max_ms").as_f64().unwrap(), 1.1));
+
+    // phase self-time breakdown (totals across all three steps)
+    let phases = a.at("phases");
+    assert!(close(phases.at("sample").at("total_ms").as_f64().unwrap(), 0.3));
+    assert!(close(phases.at("grad").at("total_ms").as_f64().unwrap(), 1.65));
+    assert_eq!(phases.at("grad").at("calls").as_f64(), Some(6.0));
+    assert_eq!(phases.at("eval").at("calls").as_f64(), Some(1.0));
+    let grad_pct = phases.at("grad").at("pct_of_step").as_f64().unwrap();
+    assert!(close(grad_pct, 100.0 * 1.65 / 3.05));
+
+    // critical path: serial sample/commit + slowest worker per step
+    let cp = a.at("critical_path");
+    assert!(close(cp.at("sample_ms").as_f64().unwrap(), 0.3));
+    assert!(close(cp.at("compute_ms").as_f64().unwrap(), 2.1));
+    assert!(close(cp.at("commit_ms").as_f64().unwrap(), 0.36));
+    assert!(close(cp.at("critical_ms").as_f64().unwrap(), 2.76));
+    assert!(close(cp.at("stall_ms").as_f64().unwrap(), 0.29));
+
+    // span-attributed worker busy + imbalance
+    let w = a.at("workers");
+    assert_eq!(w.at("count").as_f64(), Some(2.0));
+    let busy = w.at("busy_ms").as_arr().unwrap();
+    assert!(close(busy[0].as_f64().unwrap(), 2.1));
+    assert!(close(busy[1].as_f64().unwrap(), 1.65));
+    let imb = w.at("imbalance_pct").as_f64().unwrap();
+    assert!(close(imb, 100.0 * (1.0 - 1.875 / 2.1)));
+
+    // top-k: step 4 is slowest, grad-dominated at 550/1100 µs
+    let top = a.at("top_steps").as_arr().unwrap();
+    assert_eq!(top.len(), 2);
+    assert_eq!(top[0].at("step").as_f64(), Some(4.0));
+    assert!(close(top[0].at("dur_ms").as_f64().unwrap(), 1.1));
+    assert_eq!(top[0].at("dominant_phase").as_str(), Some("grad"));
+    assert!(close(top[0].at("dominant_pct").as_f64().unwrap(), 50.0));
+    assert_eq!(top[1].at("step").as_f64(), Some(0.0));
+
+    // staleness EWMA: 2.0 then 0.3·3.0 + 0.7·2.0; no drift warning
+    // (3.0 is exactly the 1.5× threshold, which must not fire)
+    let st = a.at("staleness");
+    let eps = st.at("epochs").as_arr().unwrap();
+    assert_eq!(eps.len(), 2);
+    assert!(close(eps[0].at("ewma").as_f64().unwrap(), 2.0));
+    assert!(close(eps[1].at("ewma").as_f64().unwrap(), 2.3));
+    assert!(st.at("warnings").as_arr().unwrap().is_empty());
+
+    // SED drop-rate from cumulative counters: 0.5, then 65/120
+    let sed = a.at("sed");
+    let eps = sed.at("epochs").as_arr().unwrap();
+    assert!(close(eps[0].at("drop_rate").as_f64().unwrap(), 0.5));
+    assert!(close(eps[1].at("drop_rate").as_f64().unwrap(), 65.0 / 120.0));
+    assert!(sed.at("warnings").as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn trace_analysis_is_deterministic() {
+    let text = fixture();
+    let a = analyze_trace(&text, 3).unwrap().to_string();
+    let b = analyze_trace(&text, 3).unwrap().to_string();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn malformed_trace_lines_are_loud() {
+    assert!(analyze_trace("{not json", 5).is_err());
+    let missing_phase = r#"{"ev":"span","dur_us":10}"#;
+    assert!(analyze_trace(missing_phase, 5).is_err());
+    // unknown event kinds and blank lines are tolerated
+    let odd = "\n{\"ev\":\"other\",\"x\":1}\n";
+    assert!(analyze_trace(odd, 5).is_ok());
+}
+
+#[test]
+fn committed_baseline_passes_against_itself() {
+    let base = baseline();
+    let d = diff_reports(&base, &base, 20.0).unwrap();
+    assert_eq!(d.at("pass").as_bool(), Some(true), "{d:?}");
+    assert!(d.at("regressions").as_arr().unwrap().is_empty());
+    // the baseline actually exercises the v2-only gate fields
+    let fields = d.at("fields").as_arr().unwrap();
+    let names: Vec<&str> = fields
+        .iter()
+        .map(|f| f.at("field").as_str().unwrap())
+        .collect();
+    assert!(names.contains(&"steps.steady_mean_ms"));
+    assert!(names.contains(&"workers.imbalance_pct"));
+    assert!(names.contains(&"contention.total_wait_ms"));
+    assert!(names.contains(&"caches.fill.hit_rate"));
+}
+
+#[test]
+fn injected_step_regression_fails_the_gate() {
+    let base = baseline();
+    // candidate: steady mean inflated 25% (the CI gate's injection)
+    let text = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/baselines/report_baseline.json"
+    ))
+    .unwrap()
+    .replace("\"steady_mean_ms\":13.0", "\"steady_mean_ms\":16.25");
+    let cand = Json::parse(&text).unwrap();
+    let d = diff_reports(&base, &cand, 20.0).unwrap();
+    assert_eq!(d.at("pass").as_bool(), Some(false));
+    let regs = d.at("regressions").as_arr().unwrap();
+    assert_eq!(regs.len(), 1);
+    assert_eq!(regs[0].as_str(), Some("steps.steady_mean_ms"));
+}
