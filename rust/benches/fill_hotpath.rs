@@ -86,12 +86,13 @@ fn main() {
             .unwrap();
     for &(g, s) in &pairs {
         prepared[g].fill(s, None, &mut nodes, &mut adj, &mut mask);
-        cache.put(((g as u64) << 24) | s as u64, &nodes, &adj, &mask);
+        cache.put(0, ((g as u64) << 24) | s as u64, &nodes, &adj, &mask);
     }
     let bench = harness::Bench::new("cached fill (warm)").warmup(2).iters(12);
     let cached_ms = bench.run(|| {
         for &(g, s) in &pairs {
             let hit = cache.get(
+                0,
                 ((g as u64) << 24) | s as u64,
                 &mut nodes,
                 &mut adj,

@@ -1,0 +1,266 @@
+//! Steady-state step allocation audit: drives the exact post-warmup
+//! inner-loop machinery the trainer uses — indexed RNG streams,
+//! `sed::draw_into`, the warm shared fill cache, pooled XLA literals and
+//! the batched [`CommitBatch`] write-back — under a counting global
+//! allocator, against a "legacy" arm shaped like the pre-reuse code
+//! (format!-keyed streams, allocating SED draws, per-step staging vecs,
+//! per-row table puts). Needs no AOT artifacts. Emits
+//! BENCH_steady_alloc.json; CI asserts `alloc_per_step_after == 0`.
+//!
+//!     cargo bench --bench steady_state
+//!
+//! [`CommitBatch`]: gst::train::core::CommitBatch
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::hint::black_box;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use gst::datasets::{MalnetDataset, MalnetSplit};
+use gst::partition::Algorithm;
+use gst::sed;
+use gst::segment::{AdjNorm, FillHandle, PreparedSegments, SegmentedGraph};
+use gst::table::EmbeddingTable;
+use gst::train::core::CommitBatch;
+use gst::util::rng::Pcg64;
+
+/// System-allocator wrapper counting every heap acquisition. Frees are
+/// not counted: the invariant under test is "the steady-state step
+/// acquires no heap memory", and realloc/alloc_zeroed are acquisitions.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+const MAX_NODES: usize = 128;
+const FEAT: usize = 16;
+const TD: usize = 4;
+const KEEP_P: f32 = 0.5;
+/// steps run before counting (fills caches, pools, buffer capacities)
+const WARM: usize = 64;
+/// steps in each counted window
+const COUNT: usize = 256;
+
+fn block_key(g: usize, s: usize) -> u64 {
+    ((g as u64) << 24) | s as u64
+}
+
+fn main() {
+    let data = MalnetDataset::generate(MalnetSplit::Large, 12, 0);
+    let mut prng = Pcg64::new(0, 0x5d).stream("partition");
+    let segs: Vec<SegmentedGraph> = data
+        .graphs
+        .iter()
+        .map(|g| {
+            let set = Algorithm::MetisLike.partition(g, MAX_NODES, &mut prng);
+            SegmentedGraph::new(g, &set)
+        })
+        .collect();
+    let prepared: Vec<PreparedSegments> = data
+        .graphs
+        .iter()
+        .zip(&segs)
+        .map(|(g, sg)| {
+            PreparedSegments::new(g, sg, AdjNorm::SymSelfLoop, MAX_NODES, FEAT)
+        })
+        .collect();
+    let rows: Vec<usize> = segs.iter().map(|s| s.num_segments()).collect();
+    let batch = rows.len();
+    println!(
+        "\nsteady-state step ({} graphs, {} segments, N={}, F={}, td={}):",
+        batch,
+        rows.iter().sum::<usize>(),
+        MAX_NODES,
+        FEAT,
+        TD
+    );
+
+    let mut nodes = vec![0f32; MAX_NODES * FEAT];
+    let mut adj = vec![0f32; MAX_NODES * MAX_NODES];
+    let mut mask = vec![0f32; MAX_NODES];
+
+    // a budget large enough for every block: steady state is all hits
+    let mut fill = FillHandle::new(
+        256,
+        true,
+        MAX_NODES * FEAT,
+        MAX_NODES * MAX_NODES,
+        MAX_NODES,
+    );
+    fill.bind_generation(1);
+    assert!(fill.is_enabled());
+    let mut table = EmbeddingTable::new(&rows, TD);
+    for (g, &j) in rows.iter().enumerate() {
+        for s in 0..j {
+            prepared[g].fill(s, None, &mut nodes, &mut adj, &mut mask);
+            fill.put(block_key(g, s), &nodes, &adj, &mask);
+            table.put(g, s, &[0.1; TD], 0);
+        }
+    }
+
+    // step-owned reusable state (the trainer's core-owned equivalents)
+    let root = Pcg64::new(7, 0x57ed);
+    let mut commit = CommitBatch::with_capacity(2 * batch, TD);
+    let mut eta: Vec<f32> = Vec::new();
+    let mut h_s = vec![0f32; batch * TD];
+    let mut stale_sum = [0f32; TD];
+
+    // One optimization step over the whole batch. `legacy = true` runs
+    // the pre-reuse shape of the same work: format!-keyed RNG streams,
+    // allocating SED draws, a fresh staging vec per write-back, and
+    // per-row table puts instead of one batched flush.
+    let mut step = |i: u64, legacy: bool| -> f32 {
+        let mut acc = 0f32;
+        let mut rng = if legacy {
+            root.stream(&format!("step{i}"))
+        } else {
+            root.stream_indexed("step", i)
+        };
+        commit.begin();
+        for (g, &j) in rows.iter().enumerate() {
+            let s = rng.below(j);
+            let eta_fresh = if legacy {
+                let w = sed::draw(j, &[s], KEEP_P, &mut rng);
+                eta.clear();
+                eta.extend_from_slice(&w.eta_stale);
+                w.eta_fresh
+            } else {
+                sed::draw_into(j, &[s], KEEP_P, &mut rng, &mut eta)
+            };
+            // stale reads from the table snapshot, SED-weighted
+            stale_sum.fill(0.0);
+            for seg in 0..j {
+                if seg == s {
+                    continue;
+                }
+                if let Some(h) = table.get(g, seg) {
+                    for (d, x) in h.iter().enumerate() {
+                        stale_sum[d] += eta[seg] * x;
+                    }
+                }
+            }
+            // sampled segment's block via the warm shared fill cache
+            let hit = fill.get(block_key(g, s), &mut nodes, &mut adj, &mut mask);
+            assert!(hit, "steady state must be all cache hits");
+            // host->device marshalling: the pooled literal cycle
+            let lit = xla::Literal::vec1(&mask);
+            let lit2 = lit.reshape(&[1, MAX_NODES as i64]).unwrap();
+            acc += lit2.dims()[1] as f32
+                + eta_fresh
+                + stale_sum[0]
+                + nodes[0]
+                + adj[0];
+            // the sampled segment's fresh-embedding write-back
+            let hv = (i as f32).mul_add(1e-3, g as f32);
+            if legacy {
+                let row = vec![hv; TD];
+                table.put(g, s, &row, i as u32 + 1);
+            } else {
+                h_s[g * TD..(g + 1) * TD].fill(hv);
+                commit.push(table.slot_index(g, s));
+            }
+        }
+        if !legacy {
+            commit.flush(&mut table, i as u32 + 1, |id| {
+                let k = id as usize;
+                &h_s[k * TD..(k + 1) * TD]
+            });
+        }
+        acc
+    };
+
+    let mut i = 0u64;
+    let mut acc = 0f32;
+
+    // -- allocation counting (plain loops: Bench itself allocates) --
+    for _ in 0..WARM {
+        i += 1;
+        acc += step(i, false);
+    }
+    let a0 = allocs();
+    for _ in 0..COUNT {
+        i += 1;
+        acc += step(i, false);
+    }
+    let after_delta = allocs() - a0;
+
+    for _ in 0..WARM {
+        i += 1;
+        acc += step(i, true);
+    }
+    let b0 = allocs();
+    for _ in 0..COUNT {
+        i += 1;
+        acc += step(i, true);
+    }
+    let before_delta = allocs() - b0;
+
+    let per = |d: u64| d as f64 / COUNT as f64;
+    println!(
+        "heap acquisitions/step: legacy {:.1}, steady {:.1} \
+         (over {} counted steps)",
+        per(before_delta),
+        per(after_delta),
+        COUNT
+    );
+
+    // -- wall-clock (separate pass: the harness's sample vec allocates) --
+    let bench =
+        harness::Bench::new("steady step (reused/batched)").warmup(8).iters(40);
+    let after_ms = bench.run(|| {
+        i += 1;
+        step(i, false)
+    });
+    let bench =
+        harness::Bench::new("legacy step (alloc per step)").warmup(8).iters(40);
+    let before_ms = bench.run(|| {
+        i += 1;
+        step(i, true)
+    });
+    black_box(acc);
+
+    let series = vec![
+        ("alloc_per_step_after".to_string(), per(after_delta)),
+        ("alloc_per_step_before".to_string(), per(before_delta)),
+        ("step_us_after".to_string(), after_ms * 1e3),
+        ("step_us_before".to_string(), before_ms * 1e3),
+    ];
+    harness::emit_json_unit("steady_alloc", "per_step", &series, false);
+
+    assert_eq!(
+        after_delta, 0,
+        "steady-state step performed {after_delta} heap acquisitions \
+         over {COUNT} steps — the reuse contract is broken"
+    );
+}

@@ -150,6 +150,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             .get_usize("fill-cache-mb")
             .map_err(|e| anyhow!(e))?,
         obs,
+        shared_fill_cache: true,
+        batched_writeback: true,
     };
     let count = args.get_usize("graphs").map_err(|e| anyhow!(e))?;
     let root = args.get("artifacts").unwrap();

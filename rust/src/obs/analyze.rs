@@ -578,6 +578,7 @@ pub fn diff_reports(
     // v2-only sections: compared only when both reports carry them
     push("workers.imbalance_pct", true, 1.0);
     push("contention.total_wait_ms", true, MIN_TIME_MS);
+    push("contention.table_writeback_ms", true, MIN_TIME_MS);
     push("engine.marshalled_bytes", true, 1.0);
 
     let mut rows = Vec::with_capacity(fields.len());

@@ -157,7 +157,11 @@ pub fn ne(g: &Csr, max_size: usize, rng: &mut Pcg64) -> SegmentSet {
                 })
                 .unwrap();
             boundary.swap_remove(bi);
-            if part_nodes.len() >= max_size.saturating_sub(1) {
+            // the part is closed only once its support is FULL — the
+            // claim guard below keeps it at max_size even while v's
+            // unassigned edges are absorbed (closing at max_size - 1
+            // leaves every part one node short)
+            if part_nodes.len() >= max_size {
                 break;
             }
             part_nodes.insert(v);
@@ -281,6 +285,46 @@ mod tests {
             assert_eq!(leaf_appearances[leaf], 1, "leaf {leaf} replicated");
         }
         assert!(leaf_appearances[0] >= 2, "hub not replicated");
+    }
+
+    #[test]
+    fn ne_parts_fill_to_max_size() {
+        // A 48-node path glued to a disjoint 12-clique. The clique
+        // inflates the average degree enough that the edge budget never
+        // binds on path parts, and path expansion admits exactly one new
+        // vertex per boundary pull — so the first path-seeded part grows
+        // until the max_size guard stops it, at exactly max_size nodes.
+        // The pre-fix guard (`>= max_size - 1`) closed them at 9.
+        use crate::testing::prop::{forall, Gen};
+        forall(
+            "ne fills parts to max_size",
+            16,
+            Gen::usize(0..1 << 16),
+            |&seed| {
+                let mut b = GraphBuilder::new(60, 0);
+                for i in 0..47 {
+                    b.add_edge(i, i + 1);
+                }
+                for i in 48..60 {
+                    for j in i + 1..60 {
+                        b.add_edge(i, j);
+                    }
+                }
+                let g = b.build();
+                let mut rng = Pcg64::new(seed as u64, 0xec);
+                let set = ne(&g, 10, &mut rng);
+                if set.validate(&g, 10).is_err() {
+                    return false;
+                }
+                // largest segment made purely of path nodes
+                set.segments
+                    .iter()
+                    .filter(|s| s.iter().all(|&v| v < 48))
+                    .map(|s| s.len())
+                    .max()
+                    == Some(10)
+            },
+        );
     }
 
     #[test]

@@ -26,6 +26,8 @@ use super::params::ParamStore;
 use crate::metrics::CacheStats;
 use crate::util::sync::{LockStats, TimedMutex, TimedRwLock};
 use anyhow::{anyhow, bail, Result};
+use std::borrow::Borrow;
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -94,6 +96,29 @@ impl<'a> From<&'a HostTensor> for HostArg<'a> {
             HostTensor::S32(v) => HostArg::S32(v),
         }
     }
+}
+
+thread_local! {
+    /// Per-thread staging for marshalled input literals. The Vec (and,
+    /// through the xla buffer pools, the literals' storage) survives
+    /// across calls, so steady-state input marshalling allocates nothing.
+    static LIT_SCRATCH: RefCell<Vec<xla::Literal>> =
+        RefCell::new(Vec::new());
+    /// Per-thread staging for a spec's shape-as-i64 dims.
+    static DIMS_SCRATCH: RefCell<Vec<i64>> = RefCell::new(Vec::new());
+}
+
+/// Run `f` over this thread's (cleared) literal staging buffer.
+///
+/// Not reentrant: `f` must not trigger another engine call on the same
+/// thread (engine calls never nest — the only marshalling done inside,
+/// [`Engine::param_literals`], builds its own owned vector).
+fn with_lit_scratch<R>(f: impl FnOnce(&mut Vec<xla::Literal>) -> R) -> R {
+    LIT_SCRATCH.with(|s| {
+        let mut lits = s.borrow_mut();
+        lits.clear();
+        f(&mut lits)
+    })
 }
 
 /// Parameter-literal cache entry: (store generation, shared literal set).
@@ -194,12 +219,12 @@ impl Engine {
         }
         let bytes: usize = inputs.iter().map(|t| t.len() * 4).sum();
         self.marshal_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (t, ispec) in inputs.iter().zip(&spec.inputs) {
-            literals.push(marshal(name, ispec, t)?);
-        }
-        let args: Vec<&xla::Literal> = literals.iter().collect();
-        self.execute_marshalled(name, spec, &args)
+        with_lit_scratch(|literals| {
+            for (t, ispec) in inputs.iter().zip(&spec.inputs) {
+                literals.push(marshal(name, ispec, t)?);
+            }
+            self.execute_marshalled(name, spec, &literals[..])
+        })
     }
 
     /// Execute `name` whose leading inputs are `ps`'s parameter set,
@@ -222,18 +247,21 @@ impl Engine {
                 spec.inputs.len()
             );
         }
+        // resolve the cached parameter literals BEFORE borrowing the
+        // scratch (a cache rebuild marshals, which must not nest into it)
         let params = self.param_literals(name, spec, ps)?;
         let bytes: usize = rest.iter().map(|t| t.len() * 4).sum();
         self.marshal_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
-        let mut tail = Vec::with_capacity(rest.len());
-        for (t, ispec) in rest.iter().zip(&spec.inputs[np..]) {
-            tail.push(marshal(name, ispec, t)?);
-        }
-        let mut args: Vec<&xla::Literal> =
-            Vec::with_capacity(np + tail.len());
-        args.extend(params.iter());
-        args.extend(tail.iter());
-        self.execute_marshalled(name, spec, &args)
+        with_lit_scratch(|tail| {
+            for (t, ispec) in rest.iter().zip(&spec.inputs[np..]) {
+                tail.push(marshal(name, ispec, t)?);
+            }
+            let mut args: Vec<&xla::Literal> =
+                Vec::with_capacity(np + tail.len());
+            args.extend(params.iter());
+            args.extend(tail.iter());
+            self.execute_marshalled(name, spec, &args)
+        })
     }
 
     /// Fetch (or build) the marshalled parameter literals for `ps`.
@@ -268,19 +296,28 @@ impl Engine {
 
     /// Shared execution tail: count + time the call, run the executable
     /// over already-marshalled literals, unmarshal + validate outputs.
-    fn execute_marshalled(
+    fn execute_marshalled<L: Borrow<xla::Literal>>(
         &self,
         name: &str,
         spec: &FnSpec,
-        literals: &[&xla::Literal],
+        literals: &[L],
     ) -> Result<Vec<HostTensor>> {
-        self.calls.lock().entry(name.to_string()).or_default().count +=
-            1;
+        {
+            // get_mut-first so the steady state (key present) skips the
+            // entry-API key allocation
+            let mut calls = self.calls.lock();
+            if let Some(stat) = calls.get_mut(name) {
+                stat.count += 1;
+            } else {
+                calls
+                    .insert(name.to_string(), CallStat { count: 1, ns: 0 });
+            }
+        }
         let t0 = Instant::now();
         let exes = self.exes.read();
         let exe = exes.get(name).expect("ensured above");
         let result = exe
-            .execute::<&xla::Literal>(literals)
+            .execute(literals)
             .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
         let tuple = result[0][0]
             .to_literal_sync()
@@ -319,7 +356,9 @@ impl Engine {
             out.push(t);
         }
         let ns = t0.elapsed().as_nanos() as u64;
-        self.calls.lock().entry(name.to_string()).or_default().ns += ns;
+        if let Some(stat) = self.calls.lock().get_mut(name) {
+            stat.ns += ns;
+        }
         Ok(out)
     }
 
@@ -390,16 +429,20 @@ fn marshal(
             ispec.shape
         );
     }
-    let dims: Vec<i64> = ispec.shape.iter().map(|&d| d as i64).collect();
-    match (t, ispec.dtype) {
-        (HostArg::F32(v), Dtype::F32) => {
-            reshape_or_scalar(xla::Literal::vec1(v), &dims, v.len())
+    DIMS_SCRATCH.with(|scratch| {
+        let mut dims = scratch.borrow_mut();
+        dims.clear();
+        dims.extend(ispec.shape.iter().map(|&d| d as i64));
+        match (t, ispec.dtype) {
+            (HostArg::F32(v), Dtype::F32) => {
+                reshape_or_scalar(xla::Literal::vec1(v), &dims, v.len())
+            }
+            (HostArg::S32(v), Dtype::S32) => {
+                reshape_or_scalar(xla::Literal::vec1(v), &dims, v.len())
+            }
+            _ => bail!("{name}:{}: dtype mismatch", ispec.name),
         }
-        (HostArg::S32(v), Dtype::S32) => {
-            reshape_or_scalar(xla::Literal::vec1(v), &dims, v.len())
-        }
-        _ => bail!("{name}:{}: dtype mismatch", ispec.name),
-    }
+    })
 }
 
 #[cfg(test)]

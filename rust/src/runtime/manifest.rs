@@ -105,19 +105,29 @@ impl Manifest {
             .ok_or_else(|| anyhow!("params"))?
             .iter()
             .map(|p| {
+                let name = p
+                    .at("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("param name"))?
+                    .to_string();
+                let shape = p
+                    .at("shape")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("param `{name}`: shape"))?
+                    .iter()
+                    .map(|d| {
+                        d.as_usize().ok_or_else(|| {
+                            anyhow!(
+                                "param `{name}`: malformed shape \
+                                 dimension {d:?} (want a non-negative \
+                                 integer)"
+                            )
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
                 Ok(ParamSpec {
-                    name: p
-                        .at("name")
-                        .as_str()
-                        .ok_or_else(|| anyhow!("param name"))?
-                        .to_string(),
-                    shape: p
-                        .at("shape")
-                        .as_arr()
-                        .ok_or_else(|| anyhow!("param shape"))?
-                        .iter()
-                        .map(|d| d.as_usize().unwrap_or(0))
-                        .collect(),
+                    name,
+                    shape,
                     head: p.at("head").as_bool().unwrap_or(false),
                 })
             })
@@ -270,6 +280,21 @@ mod tests {
         assert_eq!(f.inputs.len(), 2);
         assert_eq!(f.outputs[0].elems(), 40);
         assert!((m.lr - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn malformed_param_dim_errors_with_param_name() {
+        // a negative dimension used to be silently read as 0, collapsing
+        // the parameter to zero elements — it must be a parse error that
+        // names the offending parameter
+        let bad = SAMPLE.replace(
+            r#""name":"pre_w","shape":[16,64]"#,
+            r#""name":"pre_w","shape":[16,-64]"#,
+        );
+        let j = Json::parse(&bad).unwrap();
+        let err = Manifest::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("pre_w"), "error names the param: {err}");
+        assert!(err.contains("malformed shape"), "{err}");
     }
 
     #[test]

@@ -34,11 +34,28 @@ pub fn draw(
     p: f32,
     rng: &mut Pcg64,
 ) -> SedWeights {
+    let mut eta_stale = Vec::new();
+    let eta_fresh = draw_into(j, sampled, p, rng, &mut eta_stale);
+    SedWeights { eta_fresh, eta_stale }
+}
+
+/// [`draw`] into a caller-owned buffer (cleared and refilled to length
+/// `j`), so the steady-state plan loop draws weights without allocating.
+/// Consumes the RNG in exactly [`draw`]'s order: one coin per
+/// non-sampled index, ascending. Returns `eta_fresh`.
+pub fn draw_into(
+    j: usize,
+    sampled: &[usize],
+    p: f32,
+    rng: &mut Pcg64,
+    eta_stale: &mut Vec<f32>,
+) -> f32 {
     assert!(!sampled.is_empty() && sampled.len() <= j);
     assert!((0.0..=1.0).contains(&p));
     let s = sampled.len();
     let eta_fresh = p + (1.0 - p) * (j as f32) / (s as f32);
-    let mut eta_stale = vec![0.0f32; j];
+    eta_stale.clear();
+    eta_stale.resize(j, 0.0);
     for (idx, slot) in eta_stale.iter_mut().enumerate() {
         if sampled.contains(&idx) {
             *slot = 0.0; // fresh segments use eta_fresh, not this array
@@ -46,28 +63,50 @@ pub fn draw(
             *slot = if rng.coin(p as f64) { 1.0 } else { 0.0 };
         }
     }
-    SedWeights { eta_fresh, eta_stale }
+    eta_fresh
 }
 
 /// The no-SED (GST+E) weights: every stale segment kept with weight 1 and
 /// fresh segments weight 1 — the p=1 limiting case.
 pub fn keep_all(j: usize, sampled: &[usize]) -> SedWeights {
-    let mut eta_stale = vec![1.0f32; j];
+    let mut eta_stale = Vec::new();
+    let eta_fresh = keep_all_into(j, sampled, &mut eta_stale);
+    SedWeights { eta_fresh, eta_stale }
+}
+
+/// [`keep_all`] into a caller-owned buffer; returns `eta_fresh`.
+pub fn keep_all_into(
+    j: usize,
+    sampled: &[usize],
+    eta_stale: &mut Vec<f32>,
+) -> f32 {
+    eta_stale.clear();
+    eta_stale.resize(j, 1.0);
     for &s in sampled {
         eta_stale[s] = 0.0;
     }
-    SedWeights { eta_fresh: 1.0, eta_stale }
+    1.0
 }
 
 /// GST-One weights: drop every stale segment (p=0 limiting case). The
 /// fresh up-weight J/S makes the mean-pooled embedding an unbiased
 /// magnitude estimate.
 pub fn drop_all(j: usize, sampled: &[usize]) -> SedWeights {
+    let mut eta_stale = Vec::new();
+    let eta_fresh = drop_all_into(j, sampled, &mut eta_stale);
+    SedWeights { eta_fresh, eta_stale }
+}
+
+/// [`drop_all`] into a caller-owned buffer; returns `eta_fresh`.
+pub fn drop_all_into(
+    j: usize,
+    sampled: &[usize],
+    eta_stale: &mut Vec<f32>,
+) -> f32 {
     let s = sampled.len();
-    SedWeights {
-        eta_fresh: (j as f32) / (s as f32),
-        eta_stale: vec![0.0; j],
-    }
+    eta_stale.clear();
+    eta_stale.resize(j, 0.0);
+    (j as f32) / (s as f32)
 }
 
 #[cfg(test)]
@@ -135,6 +174,37 @@ mod tests {
                 (mean - j as f64).abs() < 0.25 * (j as f64).sqrt()
             },
         );
+    }
+
+    #[test]
+    fn into_variants_match_owned_and_reuse_capacity() {
+        let mut a = Pcg64::new(17, 4);
+        let mut b = a.clone();
+        let mut buf = Vec::new();
+        for (j, sampled, p) in
+            [(8, vec![3], 0.5f32), (3, vec![0, 2], 0.9), (12, vec![5], 0.0)]
+        {
+            let w = draw(j, &sampled, p, &mut a);
+            let f = draw_into(j, &sampled, p, &mut b, &mut buf);
+            assert_eq!(w.eta_fresh, f);
+            assert_eq!(w.eta_stale, buf);
+        }
+        // Both rngs consumed identical draws.
+        assert_eq!(a.next_u64(), b.next_u64());
+        // After warmup the buffer never reallocates for j <= capacity.
+        let cap = buf.capacity();
+        draw_into(4, &[1], 0.7, &mut b, &mut buf);
+        assert_eq!(buf.capacity(), cap);
+
+        let mut buf2 = Vec::new();
+        assert_eq!(keep_all(6, &[0]).eta_stale, {
+            keep_all_into(6, &[0], &mut buf2);
+            buf2.clone()
+        });
+        assert_eq!(drop_all(6, &[2]).eta_fresh, {
+            drop_all_into(6, &[2], &mut buf2)
+        });
+        assert!(buf2.iter().all(|&e| e == 0.0));
     }
 
     #[test]

@@ -20,9 +20,13 @@
 use crate::metrics::CacheStats;
 use crate::util::sync::{LockStats, TimedMutex};
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
 
-/// Fixed-block-size cache keyed by an opaque `u64` (tasks encode their
-/// (row, segment) identity into it).
+/// Fixed-block-size cache keyed by `(generation, block_key)`: the block
+/// key encodes the task's (row, segment) identity, the generation binds
+/// entries to one parameter-store lifetime (see [`FillHandle`]), so
+/// blocks cached under a stale generation can never be served — they
+/// simply miss and age out through the clock sweep.
 pub struct FillCache {
     nodes_len: usize,
     adj_len: usize,
@@ -32,10 +36,12 @@ pub struct FillCache {
     inner: TimedMutex<Inner>,
 }
 
+type Key = (u64, u64);
+
 struct Inner {
-    map: HashMap<u64, usize>,
+    map: HashMap<Key, usize>,
     /// key stored in each slot (for eviction-time map removal)
-    keys: Vec<u64>,
+    keys: Vec<Key>,
     /// clock reference bits
     refbit: Vec<bool>,
     hand: usize,
@@ -48,7 +54,9 @@ struct Inner {
 impl FillCache {
     /// Cache holding at most `budget_mb` MiB of blocks sized for the given
     /// per-tensor lengths. Returns `None` when the budget holds no entry
-    /// (`budget_mb = 0` disables caching).
+    /// (`budget_mb = 0` disables caching) or when the block is zero-sized
+    /// — an all-zero tensor shape would otherwise make the budget divide
+    /// into millions of zero-byte slots.
     pub fn new(
         budget_mb: usize,
         nodes_len: usize,
@@ -56,7 +64,10 @@ impl FillCache {
         mask_len: usize,
     ) -> Option<FillCache> {
         let block_bytes = (nodes_len + adj_len + mask_len) * 4;
-        let capacity = (budget_mb << 20) / block_bytes.max(1);
+        if block_bytes == 0 {
+            return None;
+        }
+        let capacity = (budget_mb << 20) / block_bytes;
         if capacity == 0 {
             return None;
         }
@@ -81,17 +92,18 @@ impl FillCache {
         self.nodes_len + self.adj_len + self.mask_len
     }
 
-    /// Copy `key`'s cached block into the output views; returns `false`
-    /// (counting a miss) when the key is absent.
+    /// Copy `(gen, key)`'s cached block into the output views; returns
+    /// `false` (counting a miss) when the key is absent.
     pub fn get(
         &self,
+        gen: u64,
         key: u64,
         nodes_out: &mut [f32],
         adj_out: &mut [f32],
         mask_out: &mut [f32],
     ) -> bool {
         let mut inner = self.inner.lock();
-        let Some(&slot) = inner.map.get(&key) else {
+        let Some(&slot) = inner.map.get(&(gen, key)) else {
             inner.misses += 1;
             return false;
         };
@@ -107,9 +119,10 @@ impl FillCache {
         true
     }
 
-    /// Insert (or refresh) `key`'s block, clock-evicting when full.
+    /// Insert (or refresh) `(gen, key)`'s block, clock-evicting when full.
     pub fn put(
         &self,
+        gen: u64,
         key: u64,
         nodes: &[f32],
         adj: &[f32],
@@ -118,6 +131,7 @@ impl FillCache {
         assert_eq!(nodes.len(), self.nodes_len);
         assert_eq!(adj.len(), self.adj_len);
         assert_eq!(mask.len(), self.mask_len);
+        let key = (gen, key);
         let block = self.block();
         let mut inner = self.inner.lock();
         let slot = if let Some(&s) = inner.map.get(&key) {
@@ -182,6 +196,133 @@ impl FillCache {
     }
 }
 
+/// Process-wide registry of shared caches, keyed by (budget, block
+/// shape): trainers asking for the same configuration get the *same*
+/// cache, so an eval sweep prewarms the training fills and both phases
+/// report one merged [`CacheStats`]. Entries are weak — a cache dies
+/// with its last [`FillHandle`], it is never pinned by the registry.
+type RegistryKey = (usize, usize, usize, usize);
+
+fn registry() -> &'static Mutex<HashMap<RegistryKey, Weak<FillCache>>> {
+    static REG: OnceLock<Mutex<HashMap<RegistryKey, Weak<FillCache>>>> =
+        OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// A task's view of the fill-block cache: the (possibly shared) cache
+/// plus the generation its entries are keyed under. The handle is the
+/// single owner of the byte-accounting and contention surface, so the
+/// per-task gauges cannot drift between trainers.
+///
+/// The generation is the identity half of `ParamStore::cache_key()` —
+/// it changes when a trainer binds a *different* store (a new run, a
+/// reload), not on every optimizer step. Fill blocks do not depend on
+/// parameter values, so keying by the mutation counter would only
+/// destroy the cross-phase prewarming this cache exists for; keying by
+/// store identity makes entries from a dead trainer self-invalidate (they
+/// can never be served again) while eval and training within one run
+/// share blocks freely.
+pub struct FillHandle {
+    cache: Option<Arc<FillCache>>,
+    gen: u64,
+}
+
+impl FillHandle {
+    /// Handle over a cache for the given budget and block shape.
+    /// `shared = true` resolves through the process-wide registry (the
+    /// default execution mode); `false` builds a private cache (the
+    /// pinning tests' control arm). A zero budget or zero-sized block
+    /// yields a disabled handle.
+    pub fn new(
+        budget_mb: usize,
+        shared: bool,
+        nodes_len: usize,
+        adj_len: usize,
+        mask_len: usize,
+    ) -> FillHandle {
+        let cache = if shared {
+            let key = (budget_mb, nodes_len, adj_len, mask_len);
+            let mut reg = registry().lock().expect("fill cache registry");
+            match reg.get(&key).and_then(Weak::upgrade) {
+                Some(c) => Some(c),
+                None => {
+                    reg.retain(|_, w| w.strong_count() > 0);
+                    let c = FillCache::new(
+                        budget_mb, nodes_len, adj_len, mask_len,
+                    )
+                    .map(Arc::new);
+                    if let Some(c) = &c {
+                        reg.insert(key, Arc::downgrade(c));
+                    }
+                    c
+                }
+            }
+        } else {
+            FillCache::new(budget_mb, nodes_len, adj_len, mask_len)
+                .map(Arc::new)
+        };
+        FillHandle { cache, gen: 0 }
+    }
+
+    /// A handle that caches nothing (the `budget_mb = 0` shape, useful
+    /// as a default).
+    pub fn disabled() -> FillHandle {
+        FillHandle { cache: None, gen: 0 }
+    }
+
+    /// Bind the generation all subsequent lookups/inserts are keyed
+    /// under (the parameter-store identity; see the type docs).
+    pub fn bind_generation(&mut self, gen: u64) {
+        self.gen = gen;
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.cache.is_some()
+    }
+
+    /// Serve `key`'s block under the bound generation; `false` = miss
+    /// (or cache disabled — a disabled handle counts nothing).
+    pub fn get(
+        &self,
+        key: u64,
+        nodes_out: &mut [f32],
+        adj_out: &mut [f32],
+        mask_out: &mut [f32],
+    ) -> bool {
+        match &self.cache {
+            Some(c) => c.get(self.gen, key, nodes_out, adj_out, mask_out),
+            None => false,
+        }
+    }
+
+    /// Insert `key`'s block under the bound generation (no-op when
+    /// disabled).
+    pub fn put(&self, key: u64, nodes: &[f32], adj: &[f32], mask: &[f32]) {
+        if let Some(c) = &self.cache {
+            c.put(self.gen, key, nodes, adj, mask);
+        }
+    }
+
+    /// Merged hit/miss counters of the underlying cache (all sharers).
+    pub fn stats(&self) -> CacheStats {
+        self.cache.as_deref().map(FillCache::stats).unwrap_or_default()
+    }
+
+    /// Resident bytes of the underlying cache (the one true gauge —
+    /// tasks report this instead of re-deriving block arithmetic).
+    pub fn bytes(&self) -> usize {
+        self.cache.as_deref().map(FillCache::bytes).unwrap_or(0)
+    }
+
+    /// Contention rows for the run report, empty when disabled.
+    pub fn contention(&self) -> Vec<(String, LockStats)> {
+        match &self.cache {
+            Some(c) => vec![("fill_cache".into(), c.lock_stats())],
+            None => Vec::new(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,12 +338,67 @@ mod tests {
     }
 
     #[test]
+    fn zero_sized_block_disables() {
+        // A degenerate all-zero tensor shape must not produce a cache of
+        // zero-byte slots (`budget / 0-bytes` used to saturate capacity).
+        assert!(FillCache::new(64, 0, 0, 0).is_none());
+    }
+
+    #[test]
+    fn generations_are_isolated() {
+        let c = tiny();
+        let (mut n, mut a, mut m) = ([0f32; 2], [0f32; 4], [0f32; 2]);
+        c.put(1, 7, &[1.0; 2], &[1.0; 4], &[1.0; 2]);
+        // same block key under another generation: miss, not a stale hit
+        assert!(!c.get(2, 7, &mut n, &mut a, &mut m));
+        assert!(c.get(1, 7, &mut n, &mut a, &mut m));
+    }
+
+    #[test]
+    fn shared_handles_merge_stats_and_prewarm() {
+        // A deliberately odd shape so no other test's registry entry
+        // collides with this one.
+        let shape = (3usize, 5usize, 1usize);
+        let mut h1 = FillHandle::new(1, true, shape.0, shape.1, shape.2);
+        let mut h2 = FillHandle::new(1, true, shape.0, shape.1, shape.2);
+        h1.bind_generation(42);
+        h2.bind_generation(42);
+        assert!(h1.is_enabled() && h2.is_enabled());
+        let (mut n, mut a, mut m) = ([0f32; 3], [0f32; 5], [0f32; 1]);
+        h1.put(9, &[1.0; 3], &[2.0; 5], &[3.0; 1]);
+        // the second handle is served by the first handle's insert...
+        assert!(h2.get(9, &mut n, &mut a, &mut m));
+        assert_eq!(n, [1.0; 3]);
+        // ...and both report the same merged counters and bytes
+        assert_eq!(h1.stats(), h2.stats());
+        assert_eq!(h1.stats().hits, 1);
+        assert_eq!(h1.bytes(), h2.bytes());
+        assert_eq!(h1.contention().len(), 1);
+        // a private handle of the same shape is its own cache
+        let mut h3 = FillHandle::new(1, false, shape.0, shape.1, shape.2);
+        h3.bind_generation(42);
+        assert!(!h3.get(9, &mut n, &mut a, &mut m));
+    }
+
+    #[test]
+    fn disabled_handle_is_inert() {
+        let h = FillHandle::disabled();
+        let (mut n, mut a, mut m) = ([0f32; 2], [0f32; 4], [0f32; 2]);
+        assert!(!h.is_enabled());
+        assert!(!h.get(1, &mut n, &mut a, &mut m));
+        h.put(1, &[0.0; 2], &[0.0; 4], &[0.0; 2]);
+        assert_eq!(h.stats(), CacheStats::default());
+        assert_eq!(h.bytes(), 0);
+        assert!(h.contention().is_empty());
+    }
+
+    #[test]
     fn roundtrip_and_counters() {
         let c = tiny();
         let (mut n, mut a, mut m) = ([9f32; 2], [9f32; 4], [9f32; 2]);
-        assert!(!c.get(7, &mut n, &mut a, &mut m));
-        c.put(7, &[1.0, 2.0], &[3.0, 4.0, 5.0, 6.0], &[1.0, 0.0]);
-        assert!(c.get(7, &mut n, &mut a, &mut m));
+        assert!(!c.get(0, 7, &mut n, &mut a, &mut m));
+        c.put(0, 7, &[1.0, 2.0], &[3.0, 4.0, 5.0, 6.0], &[1.0, 0.0]);
+        assert!(c.get(0, 7, &mut n, &mut a, &mut m));
         assert_eq!(n, [1.0, 2.0]);
         assert_eq!(a, [3.0, 4.0, 5.0, 6.0]);
         assert_eq!(m, [1.0, 0.0]);
@@ -216,10 +412,10 @@ mod tests {
     fn put_refreshes_existing_entry() {
         let c = tiny();
         let (mut n, mut a, mut m) = ([0f32; 2], [0f32; 4], [0f32; 2]);
-        c.put(1, &[1.0; 2], &[1.0; 4], &[1.0; 2]);
-        c.put(1, &[2.0; 2], &[2.0; 4], &[2.0; 2]);
+        c.put(0, 1, &[1.0; 2], &[1.0; 4], &[1.0; 2]);
+        c.put(0, 1, &[2.0; 2], &[2.0; 4], &[2.0; 2]);
         assert_eq!(c.len(), 1);
-        assert!(c.get(1, &mut n, &mut a, &mut m));
+        assert!(c.get(0, 1, &mut n, &mut a, &mut m));
         assert_eq!(n, [2.0; 2]);
     }
 
@@ -231,16 +427,16 @@ mod tests {
         let cap = c.capacity();
         let (mut n, mut a, mut m) = ([0f32; 2], [0f32; 4], [0f32; 2]);
         for k in 0..cap as u64 {
-            c.put(k, &[k as f32; 2], &[0.0; 4], &[0.0; 2]);
+            c.put(0, k, &[k as f32; 2], &[0.0; 4], &[0.0; 2]);
         }
         assert_eq!(c.len(), cap);
         // touch key 0 (sets its reference bit), then insert a new key:
         // the sweep must skip the hot entry and evict a cold one
-        assert!(c.get(0, &mut n, &mut a, &mut m));
-        c.put(cap as u64, &[7.0; 2], &[0.0; 4], &[0.0; 2]);
+        assert!(c.get(0, 0, &mut n, &mut a, &mut m));
+        c.put(0, cap as u64, &[7.0; 2], &[0.0; 4], &[0.0; 2]);
         assert_eq!(c.len(), cap);
-        assert!(c.get(0, &mut n, &mut a, &mut m), "hot entry evicted");
-        assert!(c.get(cap as u64, &mut n, &mut a, &mut m));
+        assert!(c.get(0, 0, &mut n, &mut a, &mut m), "hot entry evicted");
+        assert!(c.get(0, cap as u64, &mut n, &mut a, &mut m));
     }
 
     #[test]
@@ -248,7 +444,7 @@ mod tests {
         let c = FillCache::new(1, 2, 4, 2).unwrap();
         let cap = c.capacity();
         for k in 0..(cap as u64) * 3 {
-            c.put(k, &[k as f32; 2], &[0.0; 4], &[0.0; 2]);
+            c.put(0, k, &[k as f32; 2], &[0.0; 4], &[0.0; 2]);
         }
         assert_eq!(c.len(), cap);
     }

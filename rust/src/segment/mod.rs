@@ -21,7 +21,7 @@
 
 pub mod fill_cache;
 
-pub use fill_cache::FillCache;
+pub use fill_cache::{FillCache, FillHandle};
 
 use crate::graph::Csr;
 use crate::partition::SegmentSet;
@@ -509,16 +509,16 @@ mod tests {
                         if ovr.is_none() {
                             // cached round trip: miss-fill-put, then hit
                             let key = si as u64;
-                            if !cache.get(key, &mut p.0, &mut p.1, &mut p.2)
+                            if !cache.get(0, key, &mut p.0, &mut p.1, &mut p.2)
                             {
-                                cache.put(key, &p.0, &p.1, &p.2);
+                                cache.put(0, key, &p.0, &p.1, &p.2);
                             }
                             let mut c = (
                                 vec![7f32; mn * fdim],
                                 vec![7f32; mn * mn],
                                 vec![7f32; mn],
                             );
-                            if !cache.get(key, &mut c.0, &mut c.1, &mut c.2)
+                            if !cache.get(0, key, &mut c.0, &mut c.1, &mut c.2)
                             {
                                 return false;
                             }

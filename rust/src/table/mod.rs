@@ -83,6 +83,29 @@ impl EmbeddingTable {
         self.version[s] = step;
     }
 
+    /// Flat arena index of `(graph, seg)` — lets a batched committer
+    /// sort write-backs into contiguous slot runs before copying.
+    pub fn slot_index(&self, graph: usize, seg: usize) -> usize {
+        self.slot(graph, seg)
+    }
+
+    /// Total number of slots in the arena.
+    pub fn num_slots(&self) -> usize {
+        self.version.len()
+    }
+
+    /// Batched write-back: store `h` (k·dim floats) into the k
+    /// consecutive slots starting at `slot0`, all versioned `step` —
+    /// one contiguous copy instead of k row copies.
+    pub fn put_run(&mut self, slot0: usize, h: &[f32], step: u32) {
+        assert_eq!(h.len() % self.dim, 0);
+        let k = h.len() / self.dim;
+        assert!(slot0 + k <= self.version.len());
+        self.data[slot0 * self.dim..(slot0 + k) * self.dim]
+            .copy_from_slice(h);
+        self.version[slot0..slot0 + k].fill(step);
+    }
+
     /// Fraction of entries ever written — 1.0 after the first full epoch.
     pub fn coverage(&self) -> f64 {
         if self.version.is_empty() {
@@ -190,6 +213,35 @@ mod tests {
         t.for_each_staleness(20, |age| ages.push(age));
         ages.sort_unstable();
         assert_eq!(ages, vec![10, 20]);
+    }
+
+    #[test]
+    fn put_run_matches_row_puts() {
+        let mut a = table();
+        let mut b = table();
+        // graph 0 has 3 segments at slots 0..3; graph 1's single segment
+        // is slot 3 — a run can span the graph boundary because the
+        // arena is flat.
+        let h: Vec<f32> = (0..16).map(|x| x as f32).collect();
+        for (k, seg) in [(0usize, 0usize), (0, 1), (0, 2)] {
+            a.put(k, seg, &h[seg * 4..(seg + 1) * 4], 7);
+        }
+        a.put(1, 0, &h[12..16], 7);
+        b.put_run(b.slot_index(0, 0), &h, 7);
+        for (g, s) in [(0, 0), (0, 1), (0, 2), (1, 0)] {
+            assert_eq!(a.get(g, s), b.get(g, s));
+            assert_eq!(a.staleness(g, s, 9), b.staleness(g, s, 9));
+        }
+        // untouched slots still unwritten
+        assert!(b.get(2, 0).is_none());
+        assert_eq!(b.num_slots(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn put_run_out_of_range_panics() {
+        let mut t = table();
+        t.put_run(5, &[0.0; 8], 0);
     }
 
     #[test]

@@ -36,7 +36,7 @@ use super::{Method, RunResult, SedMode, TrainConfig};
 use crate::memory::MemoryModel;
 use crate::metrics::{CacheStats, Curve};
 use crate::obs::{EpochStats, Histogram, Phase, Recorder};
-use crate::runtime::{Engine, ParamStore};
+use crate::runtime::{Engine, Manifest, ParamStore};
 use crate::sed;
 use crate::table::EmbeddingTable;
 use crate::util::json::Json;
@@ -120,15 +120,17 @@ pub trait GstTask: Sync {
     /// chunks of B graphs, drop-last; TpuGraphs: one graph per unit).
     fn plan_epoch(&self, order: &[usize]) -> Vec<Vec<usize>>;
 
-    /// Describe one micro-batch: build the per-step context and exactly
-    /// `manifest.batch` slot specs. Runs sequentially in the plan phase;
-    /// any task-side randomness (e.g. config sampling) draws from `rng`,
-    /// the step's private stream.
+    /// Describe one micro-batch: build the per-step context and push
+    /// exactly `manifest.batch` slot specs into `slots` (handed over
+    /// cleared, with its allocation reused across steps). Runs
+    /// sequentially in the plan phase; any task-side randomness (e.g.
+    /// config sampling) draws from `rng`, the step's private stream.
     fn begin_step(
         &mut self,
         unit: &[usize],
         rng: &mut Pcg64,
-    ) -> (Self::StepCtx, Vec<SlotSpec>);
+        slots: &mut Vec<SlotSpec>,
+    ) -> Self::StepCtx;
 
     /// Write the loss-specific buffers (`labels` for classification, the
     /// `pair` ordering mask for ranking; `pair` arrives zeroed).
@@ -189,6 +191,13 @@ pub trait GstTask: Sync {
         Vec::new()
     }
 
+    /// Bind the fill-block cache generation (the parameter-store
+    /// identity from `ParamStore::cache_key().0`) — called once by
+    /// [`GstCore::with_task`] after parameters load, so cache entries
+    /// are keyed to this trainer's store lifetime
+    /// (`segment::FillHandle`). Default: no cache to bind.
+    fn bind_fill_generation(&mut self, _gen: u64) {}
+
     /// Full Graph Training baseline epoch. Default: unsupported (tasks
     /// whose constructor rejects `Method::FullGraph` never reach this).
     fn full_graph_epoch(&mut self, _env: &mut CoreEnv<'_>) -> Result<()> {
@@ -218,24 +227,42 @@ pub fn padded_index(slot: usize, chunk_len: usize) -> usize {
     slot.min(chunk_len - 1)
 }
 
-/// SED weights for one slot under `mode` (Eq. 1 and its limiting cases).
+/// SED weights for one slot under `mode` (Eq. 1 and its limiting
+/// cases), drawn into the core's reusable scratch; returns `eta_fresh`.
+fn sed_weights_into(
+    mode: SedMode,
+    j: usize,
+    s: usize,
+    rng: &mut Pcg64,
+    eta_stale: &mut Vec<f32>,
+) -> f32 {
+    match mode {
+        SedMode::KeepAll => sed::keep_all_into(j, &[s], eta_stale),
+        SedMode::DropAll => sed::drop_all_into(j, &[s], eta_stale),
+        SedMode::Draw(p) => sed::draw_into(j, &[s], p, rng, eta_stale),
+    }
+}
+
+#[cfg(test)]
 fn sed_weights(
     mode: SedMode,
     j: usize,
     s: usize,
     rng: &mut Pcg64,
 ) -> sed::SedWeights {
-    match mode {
-        SedMode::KeepAll => sed::keep_all(j, &[s]),
-        SedMode::DropAll => sed::drop_all(j, &[s]),
-        SedMode::Draw(p) => sed::draw(j, &[s], p, rng),
-    }
+    let mut eta_stale = Vec::new();
+    let eta_fresh = sed_weights_into(mode, j, s, rng, &mut eta_stale);
+    sed::SedWeights { eta_fresh, eta_stale }
 }
 
-/// Fully-resolved plan for one micro-batch (plan phase output). Immutable
-/// and `Sync` during the compute phase.
+/// Fully-resolved plan for one micro-batch (plan phase output).
+/// Immutable and `Sync` during the compute phase. The core owns one per
+/// micro-batch slot and reset-and-reuses it every group, so the
+/// steady-state plan phase performs no heap allocation (pinned by the
+/// realloc counter the integration tests read).
 struct StepPlan<C> {
-    ctx: C,
+    /// per-step task context, replaced by `reset` each group
+    ctx: Option<C>,
     slots: Vec<SlotSpec>,
     /// sampled segment per slot
     sampled: Vec<usize>,
@@ -249,13 +276,134 @@ struct StepPlan<C> {
     step_id: u32,
 }
 
-/// Compute-phase output for one micro-batch.
+impl<C> StepPlan<C> {
+    /// A plan sized for `b` slots of dimension `td`; `fresh` holds the
+    /// worst case (every slot recomputing all `Jmax - 1` stale
+    /// segments) so it can never grow in steady state.
+    fn with_capacity(b: usize, td: usize, fresh_cap: usize) -> StepPlan<C> {
+        StepPlan {
+            ctx: None,
+            slots: Vec::with_capacity(b),
+            sampled: vec![0; b],
+            eta_fresh: vec![0.0; b],
+            stale: vec![0.0; b * td],
+            fresh: Vec::with_capacity(fresh_cap),
+            step_id: 0,
+        }
+    }
+
+    fn ctx(&self) -> &C {
+        self.ctx.as_ref().expect("plan used before reset")
+    }
+}
+
+/// Compute-phase output for one micro-batch. Core-owned and reused like
+/// [`StepPlan`]: `out` is shaped once by [`ops::StepOut::zeros`] and
+/// overwritten in place, `fresh_embs` is a flat `[nfresh, td]` arena.
 struct StepResult {
-    grads: Vec<Vec<f32>>,
-    /// fresh sampled-segment embeddings [B, table_dim]
-    h_s: Vec<f32>,
-    /// one embedding per `plan.fresh` entry, in order
-    fresh_embs: Vec<Vec<f32>>,
+    out: ops::StepOut,
+    /// one embedding per `plan.fresh` entry, in order, flattened
+    fresh_embs: Vec<f32>,
+}
+
+impl StepResult {
+    fn with_capacity(m: &Manifest, fresh_cap: usize) -> StepResult {
+        StepResult {
+            out: ops::StepOut::zeros(m),
+            fresh_embs: Vec::with_capacity(fresh_cap * m.table_dim),
+        }
+    }
+}
+
+/// Reusable scratch for batched table write-backs: collect each
+/// micro-batch's (arena slot, arrival order) pairs, then [`flush`] them
+/// as sorted maximal consecutive-slot runs — one staged
+/// `copy_from_slice` per run instead of one `put` per row. Public (doc
+/// hidden) so the steady-state bench can drive the exact committer the
+/// trainer uses.
+///
+/// [`flush`]: CommitBatch::flush
+#[doc(hidden)]
+#[derive(Default)]
+pub struct CommitBatch {
+    /// (table arena slot, arrival order); the order index doubles as
+    /// the payload id handed back to `flush`'s source lookup
+    entries: Vec<(usize, u32)>,
+    /// staged contiguous payload for the run being written
+    staged: Vec<f32>,
+}
+
+impl CommitBatch {
+    pub fn new() -> CommitBatch {
+        CommitBatch::default()
+    }
+
+    /// Preallocate for `max_entries` write-backs of dimension `td`, so
+    /// steady-state flushes never grow the scratch.
+    pub fn with_capacity(max_entries: usize, td: usize) -> CommitBatch {
+        CommitBatch {
+            entries: Vec::with_capacity(max_entries),
+            staged: Vec::with_capacity(max_entries * td),
+        }
+    }
+
+    /// Start a new micro-batch's collection.
+    pub fn begin(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Record a write-back of the next payload (payload ids are the
+    /// 0-based push order) into table arena slot `table_slot`.
+    pub fn push(&mut self, table_slot: usize) {
+        let order = self.entries.len() as u32;
+        self.entries.push((table_slot, order));
+    }
+
+    /// Write every collected entry into `table` at version `step`.
+    /// `src(id)` returns payload `id`'s `td` floats.
+    ///
+    /// Ordering guarantee: for entries targeting the same slot, only
+    /// the **last pushed** payload is written — exactly the sequential
+    /// committer's outcome, where later `put`s overwrite earlier ones
+    /// (sorting is by (slot, push order), so the keep-last dedup is a
+    /// suffix pick within each equal-slot group).
+    pub fn flush<'s, F>(
+        &mut self,
+        table: &mut EmbeddingTable,
+        step: u32,
+        src: F,
+    ) where
+        F: Fn(u32) -> &'s [f32],
+    {
+        self.entries.sort_unstable();
+        // in-place keep-last dedup (sort_unstable + the compaction
+        // below allocate nothing)
+        let n = self.entries.len();
+        let mut w = 0;
+        for r in 0..n {
+            if r + 1 == n || self.entries[r + 1].0 != self.entries[r].0 {
+                self.entries[w] = self.entries[r];
+                w += 1;
+            }
+        }
+        self.entries.truncate(w);
+        let mut i = 0;
+        while i < self.entries.len() {
+            let slot0 = self.entries[i].0;
+            let mut j = i + 1;
+            while j < self.entries.len()
+                && self.entries[j].0 == slot0 + (j - i)
+            {
+                j += 1;
+            }
+            self.staged.clear();
+            for e in &self.entries[i..j] {
+                self.staged.extend_from_slice(src(e.1));
+            }
+            table.put_run(slot0, &self.staged, step);
+            i = j;
+        }
+    }
 }
 
 /// The shared GST driver. Owns all cross-step state (parameters, Adam
@@ -281,6 +429,20 @@ pub struct GstCore<'a, T: GstTask> {
     /// the commit path holds no lock (it has `&mut` on the table), so
     /// its cost is measured directly rather than through a timed lock
     table_writeback_ns: u64,
+    /// reusable per-micro-batch plans (grown once, reset every group)
+    plans: Vec<StepPlan<T::StepCtx>>,
+    /// reusable per-micro-batch compute outputs, shard-aligned to plans
+    results: Vec<StepResult>,
+    /// reusable batched-write-back scratch (`cfg.batched_writeback`)
+    commit: CommitBatch,
+    /// reusable SED draw buffer (`sed::draw_into` target)
+    sed_buf: Vec<f32>,
+    /// worst-case `fresh` entries per micro-batch: B · (Jmax − 1)
+    fresh_cap: usize,
+    /// true once epoch 0 (cold table, pools warming) is behind us
+    steady: bool,
+    /// pool growth events while `steady` — must stay 0 (test hook)
+    plan_reallocs: u64,
 }
 
 impl<'a, T: GstTask> GstCore<'a, T> {
@@ -289,7 +451,7 @@ impl<'a, T: GstTask> GstCore<'a, T> {
     /// functions, and size the per-worker buffer pool.
     pub fn with_task(
         eng: &'a Engine,
-        task: T,
+        mut task: T,
         cfg: TrainConfig,
     ) -> Result<GstCore<'a, T>> {
         assert_eq!(eng.manifest.dataset, task.dataset());
@@ -298,9 +460,14 @@ impl<'a, T: GstTask> GstCore<'a, T> {
             "the AOT grad_step samples S=1 segment per graph slot \
              (paper's setting)"
         );
-        let table =
-            EmbeddingTable::new(&task.table_rows(), eng.manifest.table_dim);
+        let rows = task.table_rows();
+        let table = EmbeddingTable::new(&rows, eng.manifest.table_dim);
+        let jmax = rows.iter().copied().max().unwrap_or(1);
+        let fresh_cap =
+            eng.manifest.batch * jmax.saturating_sub(1).max(1);
         let ps = ParamStore::load(eng.dir(), &eng.manifest)?;
+        // key the task's fill cache to this store's lifetime
+        task.bind_fill_generation(ps.cache_key().0);
         eng.warmup(&task.warmup_fns(cfg.method))?;
         let pool = cfg.workers.max(1).min(cfg.micro_batches.max(1));
         let bufs: Vec<BatchBufs> =
@@ -341,7 +508,25 @@ impl<'a, T: GstTask> GstCore<'a, T> {
             bufs,
             accum: GradAccum::new(&eng.manifest),
             table_writeback_ns: 0,
+            plans: Vec::new(),
+            results: Vec::new(),
+            commit: CommitBatch::with_capacity(
+                eng.manifest.batch + fresh_cap,
+                eng.manifest.table_dim,
+            ),
+            sed_buf: Vec::new(),
+            fresh_cap,
+            steady: false,
+            plan_reallocs: 0,
         })
+    }
+
+    /// Test-only hook: pool-growth events (new plans/results or plan
+    /// vector reallocation) observed after epoch 0. The allocation-free
+    /// steady-state contract says this stays 0 for the whole run.
+    #[doc(hidden)]
+    pub fn steady_plan_reallocs(&self) -> u64 {
+        self.plan_reallocs
     }
 
     pub fn engine(&self) -> &'a Engine {
@@ -402,6 +587,8 @@ impl<'a, T: GstTask> GstCore<'a, T> {
             }
             if epoch == 0 {
                 self.first_epoch_steps = self.obs.step_count();
+                // pools are warm: any further plan growth is a bug
+                self.steady = true;
             }
             self.record_epoch_telemetry(epoch + 1);
             if (epoch + 1) % self.cfg.eval_every == 0
@@ -618,7 +805,9 @@ impl<'a, T: GstTask> GstCore<'a, T> {
 
     fn gst_epoch(&mut self, epoch: usize) -> Result<()> {
         let mut order = self.task.train_items().to_vec();
-        self.rng.stream(&format!("epoch{epoch}")).shuffle(&mut order);
+        self.rng
+            .stream_indexed("epoch", epoch as u64)
+            .shuffle(&mut order);
         let units = self.task.plan_epoch(&order);
         let group = self.cfg.micro_batches.max(1);
         for chunk in units.chunks(group) {
@@ -639,38 +828,54 @@ impl<'a, T: GstTask> GstCore<'a, T> {
         let _step_span = self.obs.span(Phase::Step);
 
         // 1. plan (sequential; table reads see the group-start snapshot)
-        let mut plans: Vec<StepPlan<T::StepCtx>> =
-            Vec::with_capacity(units.len());
+        // — the plan pool is reset-and-reused: after epoch 0 this phase
+        // touches no allocator (every growth event is counted)
+        let nplans = units.len();
         let mut sed_total = 0u64;
         let mut sed_dropped = 0u64;
         {
             let _sample = self.obs.span(Phase::Sample);
             for (k, unit) in units.iter().enumerate() {
+                if self.plans.len() <= k {
+                    if self.steady {
+                        self.plan_reallocs += 1;
+                    }
+                    self.plans.push(StepPlan::with_capacity(
+                        b,
+                        td,
+                        self.fresh_cap,
+                    ));
+                }
                 let step_id = self.step + k as u32;
-                let mut rng = self.rng.stream(&format!("step{step_id}"));
-                let (ctx, slots) = self.task.begin_step(unit, &mut rng);
+                let mut rng = self.rng.stream_indexed("step", step_id as u64);
+                let plan = &mut self.plans[k];
+                let caps0 =
+                    (plan.slots.capacity(), plan.fresh.capacity());
+                plan.slots.clear();
+                let ctx =
+                    self.task.begin_step(unit, &mut rng, &mut plan.slots);
                 assert_eq!(
-                    slots.len(),
+                    plan.slots.len(),
                     b,
                     "task must describe all B slots"
                 );
-                let mut plan = StepPlan {
-                    ctx,
-                    slots,
-                    sampled: vec![0usize; b],
-                    eta_fresh: vec![0.0f32; b],
-                    stale: vec![0.0f32; b * td],
-                    fresh: Vec::new(),
-                    step_id,
-                };
+                plan.ctx = Some(ctx);
+                plan.stale.fill(0.0);
+                plan.fresh.clear();
+                plan.step_id = step_id;
                 for slot in 0..b {
                     let j = plan.slots[slot].num_segments;
                     let s = rng.below(j);
                     plan.sampled[slot] = s;
-                    let w = sed_weights(mode, j, s, &mut rng);
-                    plan.eta_fresh[slot] = w.eta_fresh;
+                    plan.eta_fresh[slot] = sed_weights_into(
+                        mode,
+                        j,
+                        s,
+                        &mut rng,
+                        &mut self.sed_buf,
+                    );
                     let row = plan.slots[slot].row;
-                    for (seg, &eta) in w.eta_stale.iter().enumerate() {
+                    for (seg, &eta) in self.sed_buf.iter().enumerate() {
                         if seg == s {
                             continue;
                         }
@@ -694,49 +899,78 @@ impl<'a, T: GstTask> GstCore<'a, T> {
                         plan.fresh.push((slot, seg, eta));
                     }
                 }
-                plans.push(plan);
+                if self.steady
+                    && (plan.slots.capacity(), plan.fresh.capacity())
+                        != caps0
+                {
+                    self.plan_reallocs += 1;
+                }
             }
         }
         self.obs.add("sed_stale_total", sed_total);
         self.obs.add("sed_stale_dropped", sed_dropped);
 
-        // 2. compute (parallel): contiguous shards keep plan order
-        let nworkers = self.bufs.len().min(plans.len()).max(1);
-        let ranges = threads::chunk_ranges(plans.len(), nworkers);
+        // 2. compute (parallel): contiguous shards keep plan order.
+        // Results are core-owned like the plans — each worker gets its
+        // shard of the result pool alongside its reusable buffers.
+        while self.results.len() < nplans {
+            if self.steady {
+                self.plan_reallocs += 1;
+            }
+            self.results
+                .push(StepResult::with_capacity(m, self.fresh_cap));
+        }
+        let nworkers = self.bufs.len().min(nplans).max(1);
+        let ranges = threads::chunk_ranges(nplans, nworkers);
         let task = &self.task;
         let ps = &self.ps;
         let obs = &self.obs;
-        let plans_ref = &plans;
+        let plans_ref = &self.plans[..nplans];
         let ranges_ref = &ranges;
-        let worker_out =
-            threads::fork_join_with(&mut self.bufs[..nworkers], |w, wb| {
-                // tag this worker's spans and time its busy interval —
-                // the raw material for the imbalance gauge
-                let _scope = obs.worker_scope(w);
-                let t0 = Instant::now();
-                let out = ranges_ref[w]
-                    .clone()
-                    .map(|pi| {
-                        compute_step(
-                            eng,
-                            task,
-                            ps,
-                            &plans_ref[pi],
-                            wb,
-                            obs,
-                        )
-                    })
-                    .collect::<Result<Vec<StepResult>>>();
-                (out, t0.elapsed().as_nanos() as u64)
-            });
+        let mut states: Vec<(&mut BatchBufs, &mut [StepResult])> =
+            Vec::with_capacity(nworkers);
+        {
+            let mut bufs_rest = &mut self.bufs[..nworkers];
+            let mut res_rest = &mut self.results[..nplans];
+            for r in &ranges {
+                let (b1, b2) = bufs_rest.split_at_mut(1);
+                let (r1, r2) = res_rest.split_at_mut(r.len());
+                states.push((&mut b1[0], r1));
+                bufs_rest = b2;
+                res_rest = r2;
+            }
+        }
+        let worker_out = threads::fork_join_with(&mut states, |w, st| {
+            // tag this worker's spans and time its busy interval —
+            // the raw material for the imbalance gauge
+            let _scope = obs.worker_scope(w);
+            let t0 = Instant::now();
+            let (wb, wres) = st;
+            let mut out = Ok(());
+            for (pi, res) in ranges_ref[w].clone().zip(wres.iter_mut()) {
+                if let Err(e) = compute_step(
+                    eng,
+                    task,
+                    ps,
+                    &plans_ref[pi],
+                    &mut **wb,
+                    res,
+                    obs,
+                ) {
+                    out = Err(e);
+                    break;
+                }
+            }
+            (out, t0.elapsed().as_nanos() as u64)
+        });
+        drop(states);
         // record every worker's busy time before error propagation, so a
         // failing step still leaves consistent telemetry behind
         let busy: Vec<u64> =
             worker_out.iter().map(|(_, ns)| *ns).collect();
         self.obs.record_fork_join(&busy);
-        let mut results: Vec<StepResult> = Vec::with_capacity(plans.len());
         for (r, _) in worker_out {
-            results.extend(r?);
+            r?;
         }
 
         // 3. commit (sequential, micro-batch order — deterministic for
@@ -746,19 +980,34 @@ impl<'a, T: GstTask> GstCore<'a, T> {
         {
             let _commit = self.obs.span(Phase::TableCommit);
             let t0 = Instant::now();
-            for (plan, res) in plans.iter().zip(&results) {
-                commit_step(
-                    &mut self.table,
-                    method.uses_table(),
-                    plan,
-                    res,
-                    td,
-                );
+            let uses_table = method.uses_table();
+            let batched = self.cfg.batched_writeback;
+            for (plan, res) in
+                self.plans[..nplans].iter().zip(&self.results[..nplans])
+            {
+                if batched {
+                    commit_step_batched(
+                        &mut self.table,
+                        uses_table,
+                        plan,
+                        res,
+                        td,
+                        &mut self.commit,
+                    );
+                } else {
+                    commit_step(
+                        &mut self.table,
+                        uses_table,
+                        plan,
+                        res,
+                        td,
+                    );
+                }
             }
             self.table_writeback_ns +=
                 t0.elapsed().as_nanos() as u64;
-            for res in &results {
-                self.accum.add(&res.grads);
+            for res in &self.results[..nplans] {
+                self.accum.add(&res.out.grads);
             }
             let lr = effective_lr(&self.cfg, eng);
             let avg = self.accum.mean();
@@ -775,7 +1024,7 @@ impl<'a, T: GstTask> GstCore<'a, T> {
                 .sum();
             self.obs.set_lock_wait_ns(eng.lock_wait_ns() + task_wait);
         }
-        self.step += plans.len() as u32;
+        self.step += nplans as u32;
         self.obs.step_stop();
         Ok(())
     }
@@ -792,14 +1041,17 @@ fn compute_step<T: GstTask>(
     ps: &ParamStore,
     plan: &StepPlan<T::StepCtx>,
     bufs: &mut BatchBufs,
+    res: &mut StepResult,
     obs: &Recorder,
-) -> Result<StepResult> {
+) -> Result<()> {
     let m = &eng.manifest;
     let (b, td) = (m.batch, m.table_dim);
+    let ctx = plan.ctx();
     // stale aggregate starts from the table-served part of the plan
     bufs.stale.copy_from_slice(&plan.stale);
-    // fresh stale embeddings, batched through embed_fwd
-    let mut fresh_embs: Vec<Vec<f32>> = Vec::with_capacity(plan.fresh.len());
+    // fresh stale embeddings, batched through embed_fwd into the
+    // result's flat arena (preallocated for the worst case)
+    res.fresh_embs.clear();
     for chunk in plan.fresh.chunks(b) {
         {
             let _fill = obs.span(Phase::Fill);
@@ -807,7 +1059,7 @@ fn compute_step<T: GstTask>(
                 let (slot, seg, _) =
                     chunk[padded_index(bslot, chunk.len())];
                 let (nodes, adj, mask) = bufs.slot(m, bslot);
-                task.fill_slot(&plan.ctx, slot, seg, nodes, adj, mask);
+                task.fill_slot(ctx, slot, seg, nodes, adj, mask);
             }
         }
         let h = {
@@ -819,7 +1071,7 @@ fn compute_step<T: GstTask>(
             for d in 0..td {
                 bufs.stale[slot * td + d] += eta * hv[d];
             }
-            fresh_embs.push(hv.to_vec());
+            res.fresh_embs.extend_from_slice(hv);
         }
     }
     // grad batch: sampled segments + SED weights + loss buffers
@@ -830,7 +1082,7 @@ fn compute_step<T: GstTask>(
             bufs.invj[slot] = plan.slots[slot].invj;
             let (nodes, adj, mask) = bufs.slot(m, slot);
             task.fill_slot(
-                &plan.ctx,
+                ctx,
                 slot,
                 plan.sampled[slot],
                 nodes,
@@ -840,18 +1092,20 @@ fn compute_step<T: GstTask>(
         }
         // reused buffers: tasks only set the pair mask's 1-entries
         bufs.pair.fill(0.0);
-        task.fill_loss(&plan.ctx, bufs);
+        task.fill_loss(ctx, bufs);
     }
-    let out = {
+    {
         let _grad = obs.span(Phase::Grad);
-        ops::grad_step(eng, ps, bufs)?
-    };
-    Ok(StepResult { grads: out.grads, h_s: out.h_s, fresh_embs })
+        ops::grad_step_into(eng, ps, bufs, &mut res.out)?;
+    }
+    Ok(())
 }
 
 /// Table write-back for one micro-batch (Alg. 2 line 7): fresh stale
 /// recomputations first, then the sampled segments' embeddings, all
-/// versioned with the micro-batch's global step index.
+/// versioned with the micro-batch's global step index. The row-by-row
+/// reference committer (`cfg.batched_writeback = false`);
+/// [`commit_step_batched`] must produce the identical table.
 fn commit_step<C>(
     table: &mut EmbeddingTable,
     uses_table: bool,
@@ -862,13 +1116,50 @@ fn commit_step<C>(
     if !uses_table {
         return;
     }
-    for (&(slot, seg, _eta), h) in plan.fresh.iter().zip(&res.fresh_embs) {
+    for (k, &(slot, seg, _eta)) in plan.fresh.iter().enumerate() {
+        let h = &res.fresh_embs[k * td..(k + 1) * td];
         table.put(plan.slots[slot].row, seg, h, plan.step_id);
     }
     for (slot, spec) in plan.slots.iter().enumerate() {
-        let h = &res.h_s[slot * td..(slot + 1) * td];
+        let h = &res.out.h_s[slot * td..(slot + 1) * td];
         table.put(spec.row, plan.sampled[slot], h, plan.step_id);
     }
+}
+
+/// [`commit_step`] through the batched committer: collect every
+/// write-back's arena slot (fresh entries first, then sampled — the
+/// sequential order), then flush as sorted contiguous runs. Last write
+/// wins per slot exactly as in the sequential loop (the TPU task emits
+/// duplicate rows within one micro-batch when configs repeat, and a
+/// sampled write must beat a fresh one for the same slot).
+fn commit_step_batched<C>(
+    table: &mut EmbeddingTable,
+    uses_table: bool,
+    plan: &StepPlan<C>,
+    res: &StepResult,
+    td: usize,
+    batch: &mut CommitBatch,
+) {
+    if !uses_table {
+        return;
+    }
+    batch.begin();
+    for &(slot, seg, _eta) in &plan.fresh {
+        batch.push(table.slot_index(plan.slots[slot].row, seg));
+    }
+    for (slot, spec) in plan.slots.iter().enumerate() {
+        batch.push(table.slot_index(spec.row, plan.sampled[slot]));
+    }
+    let nfresh = plan.fresh.len() as u32;
+    batch.flush(table, plan.step_id, |id| {
+        if id < nfresh {
+            let k = id as usize;
+            &res.fresh_embs[k * td..(k + 1) * td]
+        } else {
+            let s = (id - nfresh) as usize;
+            &res.out.h_s[s * td..(s + 1) * td]
+        }
+    });
 }
 
 #[cfg(test)]
@@ -920,7 +1211,7 @@ mod tests {
             SlotSpec { row: 1, num_segments: 2, invj: 0.5 },
         ];
         let plan = StepPlan {
-            ctx: (),
+            ctx: Some(()),
             slots,
             sampled: vec![2, 0],
             eta_fresh: vec![1.0, 1.0],
@@ -929,9 +1220,12 @@ mod tests {
             step_id: 7,
         };
         let res = StepResult {
-            grads: vec![],
-            h_s: vec![1.0, 2.0, 3.0, 4.0],
-            fresh_embs: vec![vec![9.0, 9.5]],
+            out: ops::StepOut {
+                loss: 0.0,
+                grads: vec![],
+                h_s: vec![1.0, 2.0, 3.0, 4.0],
+            },
+            fresh_embs: vec![9.0, 9.5],
         };
         (plan, res)
     }
@@ -969,9 +1263,113 @@ mod tests {
         commit_step(&mut table, true, &plan, &res, 2);
         let (mut plan2, mut res2) = plan_and_result();
         plan2.step_id = 8;
-        res2.h_s = vec![5.0, 6.0, 7.0, 8.0];
+        res2.out.h_s = vec![5.0, 6.0, 7.0, 8.0];
         commit_step(&mut table, true, &plan2, &res2, 2);
         assert_eq!(table.get(0, 2).unwrap(), &[5.0, 6.0]);
         assert_eq!(table.staleness(0, 2, 8), Some(0));
+    }
+
+    /// A plan with every conflict shape the batched committer must
+    /// preserve: a fresh entry and a sampled entry targeting the same
+    /// slot (sampled wins: it is pushed later), and two batch slots
+    /// sampling the same (row, segment) (the later slot wins — the TPU
+    /// task's duplicate-config case).
+    fn conflicting_plan_and_result() -> (StepPlan<()>, StepResult) {
+        let slots = vec![
+            SlotSpec { row: 0, num_segments: 3, invj: 1.0 / 3.0 },
+            SlotSpec { row: 1, num_segments: 2, invj: 0.5 },
+            SlotSpec { row: 1, num_segments: 2, invj: 0.5 },
+        ];
+        let plan = StepPlan {
+            ctx: Some(()),
+            slots,
+            // slots 1 and 2 both sample row 1 seg 0
+            sampled: vec![1, 0, 0],
+            eta_fresh: vec![1.0; 3],
+            stale: vec![0.0; 3 * 2],
+            // fresh also writes (row 0, seg 1) — the slot sampled writes
+            fresh: vec![(0, 1, 1.0), (0, 2, 1.0)],
+            step_id: 7,
+        };
+        let res = StepResult {
+            out: ops::StepOut {
+                loss: 0.0,
+                grads: vec![],
+                h_s: vec![10.0, 11.0, 20.0, 21.0, 30.0, 31.0],
+            },
+            fresh_embs: vec![1.0, 1.5, 2.0, 2.5],
+        };
+        (plan, res)
+    }
+
+    #[test]
+    fn batched_commit_matches_sequential() {
+        for (plan, res) in
+            [plan_and_result(), conflicting_plan_and_result()]
+        {
+            let rows = &[3usize, 2];
+            let mut seq = EmbeddingTable::new(rows, 2);
+            let mut bat = EmbeddingTable::new(rows, 2);
+            let mut scratch = CommitBatch::new();
+            commit_step(&mut seq, true, &plan, &res, 2);
+            commit_step_batched(
+                &mut bat, true, &plan, &res, 2, &mut scratch,
+            );
+            for (g, segs) in rows.iter().enumerate() {
+                for s in 0..*segs {
+                    assert_eq!(seq.get(g, s), bat.get(g, s), "({g},{s})");
+                    assert_eq!(
+                        seq.staleness(g, s, 9),
+                        bat.staleness(g, s, 9)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_commit_keeps_last_write_per_slot() {
+        let (plan, res) = conflicting_plan_and_result();
+        let mut table = EmbeddingTable::new(&[3, 2], 2);
+        let mut scratch = CommitBatch::new();
+        commit_step_batched(
+            &mut table, true, &plan, &res, 2, &mut scratch,
+        );
+        // sampled write (slot 0 → row 0 seg 1: h_s[0..2]) beats the
+        // fresh recomputation of the same (row, seg)
+        assert_eq!(table.get(0, 1).unwrap(), &[10.0, 11.0]);
+        // the LAST duplicate sampled slot (slot 2) wins row 1 seg 0
+        assert_eq!(table.get(1, 0).unwrap(), &[30.0, 31.0]);
+        // unconflicted fresh entry lands as-is
+        assert_eq!(table.get(0, 2).unwrap(), &[2.0, 2.5]);
+    }
+
+    #[test]
+    fn batched_commit_is_a_noop_without_table() {
+        let (plan, res) = plan_and_result();
+        let mut table = EmbeddingTable::new(&[3, 2], 2);
+        let mut scratch = CommitBatch::new();
+        commit_step_batched(
+            &mut table, false, &plan, &res, 2, &mut scratch,
+        );
+        assert_eq!(table.coverage(), 0.0);
+    }
+
+    #[test]
+    fn commit_batch_scratch_reuses_capacity() {
+        let (plan, res) = conflicting_plan_and_result();
+        let mut table = EmbeddingTable::new(&[3, 2], 2);
+        let mut scratch = CommitBatch::with_capacity(8, 2);
+        let caps0 =
+            (scratch.entries.capacity(), scratch.staged.capacity());
+        for _ in 0..10 {
+            commit_step_batched(
+                &mut table, true, &plan, &res, 2, &mut scratch,
+            );
+        }
+        assert_eq!(
+            (scratch.entries.capacity(), scratch.staged.capacity()),
+            caps0
+        );
     }
 }

@@ -14,7 +14,7 @@ use crate::datasets::MalnetDataset;
 use crate::metrics::{self, CacheStats, Curve};
 use crate::partition::Algorithm;
 use crate::runtime::{Engine, ParamStore};
-use crate::segment::{FillCache, PreparedSegments, SegmentedGraph};
+use crate::segment::{FillHandle, PreparedSegments, SegmentedGraph};
 use crate::util::rng::Pcg64;
 use crate::util::sync::LockStats;
 use anyhow::{bail, Result};
@@ -52,8 +52,9 @@ pub struct MalnetTask<'a> {
     /// per-graph precomputed fills (normalized edge lists + packed
     /// features) — every fill site goes through these
     prepared: Vec<PreparedSegments>,
-    /// optional padded fill-block cache (`cfg.fill_cache_mb`)
-    fill_cache: Option<FillCache>,
+    /// handle onto the (possibly process-shared) padded fill-block
+    /// cache (`cfg.fill_cache_mb` / `cfg.shared_fill_cache`)
+    fill: FillHandle,
     batch: usize,
 }
 
@@ -107,8 +108,9 @@ impl<'a> MalnetTask<'a> {
                 PreparedSegments::new(g, sg, m.adj_norm, max, m.feat)
             })
             .collect();
-        let fill_cache = FillCache::new(
+        let fill = FillHandle::new(
             cfg.fill_cache_mb,
+            cfg.shared_fill_cache,
             max * m.feat,
             max * max,
             max,
@@ -117,7 +119,7 @@ impl<'a> MalnetTask<'a> {
             data,
             segs,
             prepared,
-            fill_cache,
+            fill,
             batch: m.batch,
         })
     }
@@ -136,15 +138,11 @@ impl<'a> MalnetTask<'a> {
     ) {
         // graphs and segments both stay far below 2^24 at repo scale
         let key = ((g as u64) << 24) | seg as u64;
-        if let Some(cache) = &self.fill_cache {
-            if cache.get(key, nodes, adj, mask) {
-                return;
-            }
-            self.prepared[g].fill(seg, None, nodes, adj, mask);
-            cache.put(key, nodes, adj, mask);
-        } else {
-            self.prepared[g].fill(seg, None, nodes, adj, mask);
+        if self.fill.get(key, nodes, adj, mask) {
+            return;
         }
+        self.prepared[g].fill(seg, None, nodes, adj, mask);
+        self.fill.put(key, nodes, adj, mask);
     }
 
     /// Fresh embeddings for a list of (graph, segment) pairs, batched
@@ -304,15 +302,17 @@ impl GstTask for MalnetTask<'_> {
         &mut self,
         unit: &[usize],
         _rng: &mut Pcg64,
-    ) -> (Vec<usize>, Vec<SlotSpec>) {
-        let slots = unit
-            .iter()
-            .map(|&g| {
-                let j = self.segs[g].num_segments();
-                SlotSpec { row: g, num_segments: j, invj: 1.0 / j as f32 }
-            })
-            .collect();
-        (unit.to_vec(), slots)
+        slots: &mut Vec<SlotSpec>,
+    ) -> Vec<usize> {
+        slots.extend(unit.iter().map(|&g| {
+            let j = self.segs[g].num_segments();
+            SlotSpec { row: g, num_segments: j, invj: 1.0 / j as f32 }
+        }));
+        unit.to_vec()
+    }
+
+    fn bind_fill_generation(&mut self, gen: u64) {
+        self.fill.bind_generation(gen);
     }
 
     fn fill_loss(&self, ctx: &Vec<usize>, bufs: &mut BatchBufs) {
@@ -356,10 +356,7 @@ impl GstTask for MalnetTask<'_> {
     }
 
     fn fill_cache_stats(&self) -> CacheStats {
-        self.fill_cache
-            .as_ref()
-            .map(|c| c.stats())
-            .unwrap_or_default()
+        self.fill.stats()
     }
 
     fn prepared_bytes(&self) -> usize {
@@ -367,14 +364,11 @@ impl GstTask for MalnetTask<'_> {
     }
 
     fn fill_cache_bytes(&self) -> usize {
-        self.fill_cache.as_ref().map(|c| c.bytes()).unwrap_or(0)
+        self.fill.bytes()
     }
 
     fn contention(&self) -> Vec<(String, LockStats)> {
-        self.fill_cache
-            .as_ref()
-            .map(|c| vec![("fill_cache".to_string(), c.lock_stats())])
-            .unwrap_or_default()
+        self.fill.contention()
     }
 
     // -- Full Graph Training baseline ---------------------------------------
@@ -382,7 +376,7 @@ impl GstTask for MalnetTask<'_> {
     fn full_graph_epoch(&mut self, env: &mut CoreEnv<'_>) -> Result<()> {
         let b = env.eng.manifest.batch;
         let mut order = self.data.train.clone();
-        let mut rng = env.rng.stream(&format!("full{}", *env.step));
+        let mut rng = env.rng.stream_indexed("full", *env.step as u64);
         rng.shuffle(&mut order);
         for chunk in order.chunks(b) {
             if chunk.len() < b {

@@ -151,6 +151,18 @@ pub struct TrainConfig {
     /// Execution-only like `workers`: parameters are bit-identical with
     /// recording on or off (pinned by `tests/gst_core.rs`).
     pub obs: crate::obs::ObsConfig,
+    /// Resolve the fill-block cache through the process-wide registry
+    /// (`segment::FillHandle`), so eval sweeps prewarm training fills
+    /// and concurrent trainers of the same shape share one budget.
+    /// Execution-only: served blocks are bit-identical either way
+    /// (pinned by `tests/gst_core.rs`). `false` = private cache.
+    pub shared_fill_cache: bool,
+    /// Commit each micro-batch's table write-backs as sorted contiguous
+    /// slot runs (one copy per run) instead of row by row. Execution-only:
+    /// the batched path preserves the sequential committer's last-write-
+    /// wins ordering exactly (pinned by unit + integration tests).
+    /// `false` = legacy per-row commits.
+    pub batched_writeback: bool,
 }
 
 impl Default for TrainConfig {
@@ -169,6 +181,8 @@ impl Default for TrainConfig {
             lr: None,
             fill_cache_mb: 0,
             obs: Default::default(),
+            shared_fill_cache: true,
+            batched_writeback: true,
         }
     }
 }

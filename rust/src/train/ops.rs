@@ -74,6 +74,18 @@ pub struct StepOut {
     pub h_s: Vec<f32>,
 }
 
+impl StepOut {
+    /// A zeroed output shaped for `grad_step` under `m` — the reusable
+    /// form [`grad_step_into`] fills without reallocating.
+    pub fn zeros(m: &Manifest) -> StepOut {
+        StepOut {
+            loss: 0.0,
+            grads: m.params.iter().map(|p| vec![0.0; p.elems()]).collect(),
+            h_s: vec![0.0; m.batch * m.table_dim],
+        }
+    }
+}
+
 /// `embed_fwd` over one packed batch; returns [B, table_dim].
 ///
 /// Parameter inputs ride the engine's literal cache
@@ -117,6 +129,38 @@ pub fn grad_step(eng: &Engine, ps: &ParamStore, bufs: &BatchBufs) -> Result<Step
         grads: out[1..1 + np].iter().map(|t| t.f32s().to_vec()).collect(),
         h_s: out[1 + np].f32s().to_vec(),
     })
+}
+
+/// [`grad_step`] into a preallocated [`StepOut`] (shaped by
+/// [`StepOut::zeros`]) — the steady-state path copies engine outputs in
+/// place instead of growing fresh vectors every micro-batch.
+pub fn grad_step_into(
+    eng: &Engine,
+    ps: &ParamStore,
+    bufs: &BatchBufs,
+    out: &mut StepOut,
+) -> Result<()> {
+    let np = eng.manifest.params.len();
+    let mut rest = vec![
+        HostArg::F32(&bufs.nodes),
+        HostArg::F32(&bufs.adj),
+        HostArg::F32(&bufs.mask),
+        HostArg::F32(&bufs.stale),
+        HostArg::F32(&bufs.eta),
+        HostArg::F32(&bufs.invj),
+    ];
+    if eng.manifest.dataset == "malnet" {
+        rest.push(HostArg::S32(&bufs.labels));
+    } else {
+        rest.push(HostArg::F32(&bufs.pair));
+    }
+    let o = eng.call_with_params("grad_step", ps, &rest)?;
+    out.loss = o[0].f32s()[0];
+    for (dst, src) in out.grads.iter_mut().zip(&o[1..1 + np]) {
+        dst.copy_from_slice(src.f32s());
+    }
+    out.h_s.copy_from_slice(o[1 + np].f32s());
+    Ok(())
 }
 
 /// Full Graph Training step over ONE graph's segments (≤ full_jmax slots).

@@ -22,7 +22,7 @@ use super::{Method, TrainConfig};
 use crate::datasets::TpuDataset;
 use crate::metrics::{self, CacheStats};
 use crate::runtime::{Engine, ParamStore};
-use crate::segment::{FillCache, PreparedSegments, SegmentedGraph};
+use crate::segment::{FillHandle, PreparedSegments, SegmentedGraph};
 use crate::util::rng::Pcg64;
 use crate::util::sync::LockStats;
 use anyhow::{bail, Result};
@@ -54,9 +54,10 @@ pub struct TpuTask<'a> {
     /// per-graph precomputed fills; config features arrive per call via
     /// the override gather path
     prepared: Vec<PreparedSegments>,
-    /// optional padded fill-block cache (`cfg.fill_cache_mb`), keyed by
-    /// (graph, config, segment) since configs change the node features
-    fill_cache: Option<FillCache>,
+    /// handle onto the (possibly process-shared) padded fill-block
+    /// cache, keyed by (graph, config, segment) since configs change the
+    /// node features
+    fill: FillHandle,
     /// table rows are (graph, config) pairs: row = pair_off[g] + c
     pair_off: Vec<usize>,
     batch: usize,
@@ -109,8 +110,9 @@ impl<'a> TpuTask<'a> {
                 PreparedSegments::new(&g.csr, sg, m.adj_norm, max, m.feat)
             })
             .collect();
-        let fill_cache = FillCache::new(
+        let fill = FillHandle::new(
             cfg.fill_cache_mb,
+            cfg.shared_fill_cache,
             max * m.feat,
             max * max,
             max,
@@ -119,7 +121,7 @@ impl<'a> TpuTask<'a> {
             data,
             segs,
             prepared,
-            fill_cache,
+            fill,
             pair_off,
             batch: m.batch,
         })
@@ -146,15 +148,11 @@ impl<'a> TpuTask<'a> {
     ) {
         // (graph, config) rows and segments stay far below 2^24 here
         let key = ((self.pair_row(g, c) as u64) << 24) | seg as u64;
-        if let Some(cache) = &self.fill_cache {
-            if cache.get(key, nodes, adj, mask) {
-                return;
-            }
-            self.prepared[g].fill(seg, Some(feats), nodes, adj, mask);
-            cache.put(key, nodes, adj, mask);
-        } else {
-            self.prepared[g].fill(seg, Some(feats), nodes, adj, mask);
+        if self.fill.get(key, nodes, adj, mask) {
+            return;
         }
+        self.prepared[g].fill(seg, Some(feats), nodes, adj, mask);
+        self.fill.put(key, nodes, adj, mask);
     }
 
     /// Fresh per-segment runtime contributions for (graph, config, seg)
@@ -264,7 +262,8 @@ impl GstTask for TpuTask<'_> {
         &mut self,
         unit: &[usize],
         rng: &mut Pcg64,
-    ) -> (TpuStepCtx, Vec<SlotSpec>) {
+        slots: &mut Vec<SlotSpec>,
+    ) -> TpuStepCtx {
         assert_eq!(unit.len(), 1, "tpu units are single graphs");
         let g = unit[0];
         let graph = &self.data.graphs[g];
@@ -281,16 +280,17 @@ impl GstTask for TpuTask<'_> {
             .iter()
             .map(|&c| graph.features_for_config(c))
             .collect();
-        let slots = configs
-            .iter()
-            .map(|&c| SlotSpec {
-                row: self.pair_row(g, c),
-                num_segments: j,
-                // sum pooling: no 1/J (paper §5.3)
-                invj: 1.0,
-            })
-            .collect();
-        (TpuStepCtx { g, configs, feats }, slots)
+        slots.extend(configs.iter().map(|&c| SlotSpec {
+            row: self.pair_row(g, c),
+            num_segments: j,
+            // sum pooling: no 1/J (paper §5.3)
+            invj: 1.0,
+        }));
+        TpuStepCtx { g, configs, feats }
+    }
+
+    fn bind_fill_generation(&mut self, gen: u64) {
+        self.fill.bind_generation(gen);
     }
 
     /// Pairwise ordering mask within the batch (same graph); the core
@@ -349,10 +349,7 @@ impl GstTask for TpuTask<'_> {
     }
 
     fn fill_cache_stats(&self) -> CacheStats {
-        self.fill_cache
-            .as_ref()
-            .map(|c| c.stats())
-            .unwrap_or_default()
+        self.fill.stats()
     }
 
     fn prepared_bytes(&self) -> usize {
@@ -360,13 +357,10 @@ impl GstTask for TpuTask<'_> {
     }
 
     fn fill_cache_bytes(&self) -> usize {
-        self.fill_cache.as_ref().map(|c| c.bytes()).unwrap_or(0)
+        self.fill.bytes()
     }
 
     fn contention(&self) -> Vec<(String, LockStats)> {
-        self.fill_cache
-            .as_ref()
-            .map(|c| vec![("fill_cache".to_string(), c.lock_stats())])
-            .unwrap_or_default()
+        self.fill.contention()
     }
 }

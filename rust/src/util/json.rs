@@ -53,8 +53,14 @@ impl Json {
         }
     }
 
+    /// Non-negative integer view; `None` for negative or fractional
+    /// numbers (a saturating float cast here would silently turn a
+    /// malformed `-64` into `0`).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        self.as_f64().and_then(|x| {
+            (x >= 0.0 && x.fract() == 0.0 && x <= usize::MAX as f64)
+                .then_some(x as usize)
+        })
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -363,6 +369,15 @@ mod tests {
             j.at("a").as_arr().unwrap()[2].at("b").as_str(),
             Some("x")
         );
+    }
+
+    #[test]
+    fn as_usize_rejects_non_indices() {
+        assert_eq!(Json::Num(64.0).as_usize(), Some(64));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(-64.0).as_usize(), None);
+        assert_eq!(Json::Num(1.5).as_usize(), None);
+        assert_eq!(Json::Str("3".into()).as_usize(), None);
     }
 
     #[test]

@@ -15,6 +15,31 @@ pub struct Pcg64 {
 
 const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
 
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x1000_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Format `n` in decimal into `buf` (no allocation); returns the digits.
+fn decimal_digits(mut n: u64, buf: &mut [u8; 20]) -> &[u8] {
+    let mut i = buf.len();
+    loop {
+        i -= 1;
+        buf[i] = b'0' + (n % 10) as u8;
+        n /= 10;
+        if n == 0 {
+            break;
+        }
+    }
+    &buf[i..]
+}
+
 impl Pcg64 {
     /// Create a generator from a seed and a stream id. Different stream ids
     /// with the same seed yield statistically independent sequences.
@@ -30,11 +55,19 @@ impl Pcg64 {
     /// Derive a child stream by hashing a label — lets modules carve out
     /// private streams ("sed", "batch", ...) without coordination.
     pub fn stream(&self, label: &str) -> Self {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in label.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x1000_0000_01b3);
-        }
+        let h = fnv1a(FNV_OFFSET, label.as_bytes());
+        Pcg64::new(self.state as u64 ^ h, h)
+    }
+
+    /// `stream(&format!("{prefix}{n}"))` without the allocation: hashes
+    /// the prefix bytes then the decimal digits of `n`. FNV-1a is a
+    /// byte-streaming hash, so the result is bit-identical to the
+    /// formatted label (pinned by a unit test) — this keeps the per-step
+    /// RNG derivation off the steady-state allocation path.
+    pub fn stream_indexed(&self, prefix: &str, n: u64) -> Self {
+        let mut buf = [0u8; 20];
+        let digits = decimal_digits(n, &mut buf);
+        let h = fnv1a(fnv1a(FNV_OFFSET, prefix.as_bytes()), digits);
         Pcg64::new(self.state as u64 ^ h, h)
     }
 
@@ -144,6 +177,18 @@ mod tests {
         let mut s1 = root.stream("sed");
         let mut s2 = root.stream("batch");
         assert_ne!(s1.next_u64(), s2.next_u64());
+    }
+
+    #[test]
+    fn stream_indexed_matches_formatted_label() {
+        let root = Pcg64::new(7, 3);
+        for n in [0u64, 1, 9, 10, 99, 12345, u64::MAX] {
+            let mut a = root.stream(&format!("step{n}"));
+            let mut b = root.stream_indexed("step", n);
+            for _ in 0..32 {
+                assert_eq!(a.next_u64(), b.next_u64(), "n={n}");
+            }
+        }
     }
 
     #[test]

@@ -307,3 +307,47 @@ fn worker_contention_telemetry_is_execution_only() {
     let diff = analyze::diff_reports(rep, rep, 20.0).unwrap();
     assert_eq!(diff.at("pass").as_bool(), Some(true));
 }
+
+#[test]
+fn steady_state_knobs_never_change_parameters() {
+    let Some(d) = dir("malnet_sage_n128") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let eng = Engine::open(&d).unwrap();
+    let data = MalnetDataset::generate(MalnetSplit::Tiny, 40, 3);
+    // the whole allocation-free machinery — reused step plans, the
+    // shared generation-keyed fill cache, batched table write-backs —
+    // is execution-only: every (workers, shared_cache, batched) corner
+    // trains bit-identical parameters over a multi-epoch run, and the
+    // post-warmup epochs never grow a plan buffer
+    let run = |workers: usize, shared: bool, batched: bool| {
+        let mut c = cfg(Method::GstEFD, workers);
+        c.epochs = 3;
+        c.fill_cache_mb = 16;
+        c.shared_fill_cache = shared;
+        c.batched_writeback = batched;
+        let mut tr = MalnetTrainer::new(&eng, &data, c).unwrap();
+        let res = tr.train().unwrap();
+        assert_eq!(
+            tr.steady_plan_reallocs(),
+            0,
+            "steady-state plan pool grew \
+             (workers={workers}, shared={shared}, batched={batched})"
+        );
+        (tr.ps.values.clone(), tr.ps.m.clone(), tr.ps.v.clone(), res)
+    };
+    let (p0, m0, v0, r0) = run(1, true, true);
+    for (workers, shared, batched) in
+        [(4, true, true), (1, false, true), (1, true, false), (4, false, false)]
+    {
+        let (p, m, v, r) = run(workers, shared, batched);
+        let tag = format!(
+            "workers={workers}, shared={shared}, batched={batched}"
+        );
+        assert_eq!(p0, p, "parameters diverge ({tag})");
+        assert_eq!(m0, m, "Adam m moments diverge ({tag})");
+        assert_eq!(v0, v, "Adam v moments diverge ({tag})");
+        assert_eq!(r0.test_metric, r.test_metric, "{tag}");
+    }
+}

@@ -12,7 +12,46 @@
 //! Every type here is plain host data (no FFI handles), which also makes
 //! the whole crate `Send + Sync` — the property `Engine: Sync` relies on.
 
+use std::cell::RefCell;
 use std::fmt;
+
+/// Per-thread buffer pools backing [`Literal`] construction, clone and
+/// drop. Literals churn once per engine input per call in the training
+/// hot path; recycling their buffers makes steady-state marshalling
+/// allocation-free once each pooled vector has grown to its working
+/// capacity. Bounded per thread (`POOL_CAP` buffers per element type).
+const POOL_CAP: usize = 32;
+
+thread_local! {
+    static F32_POOL: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
+    static S32_POOL: RefCell<Vec<Vec<i32>>> = RefCell::new(Vec::new());
+    static DIMS_POOL: RefCell<Vec<Vec<i64>>> = RefCell::new(Vec::new());
+}
+
+macro_rules! pool_fns {
+    ($take:ident, $give:ident, $pool:ident, $t:ty) => {
+        fn $take() -> Vec<$t> {
+            $pool.with(|p| p.borrow_mut().pop()).unwrap_or_default()
+        }
+
+        fn $give(mut v: Vec<$t>) {
+            if v.capacity() == 0 {
+                return;
+            }
+            v.clear();
+            $pool.with(|p| {
+                let mut p = p.borrow_mut();
+                if p.len() < POOL_CAP {
+                    p.push(v);
+                }
+            });
+        }
+    };
+}
+
+pool_fns!(take_f32, give_f32, F32_POOL, f32);
+pool_fns!(take_s32, give_s32, S32_POOL, i32);
+pool_fns!(take_dims, give_dims, DIMS_POOL, i64);
 
 /// Error type mirroring xla-rs's; engine code formats it with `{:?}`.
 pub struct XlaError(pub String);
@@ -44,7 +83,8 @@ mod native {
     use super::Literal;
 
     pub trait Sealed: Copy {
-        fn wrap(v: Vec<Self>) -> super::Storage;
+        /// Copy a host slice into a pool-recycled [`super::Storage`].
+        fn wrap_pooled(v: &[Self]) -> super::Storage;
         fn unwrap(lit: &Literal) -> Option<Vec<Self>>;
     }
 }
@@ -53,8 +93,10 @@ mod native {
 pub trait NativeType: native::Sealed {}
 
 impl native::Sealed for f32 {
-    fn wrap(v: Vec<f32>) -> Storage {
-        Storage::F32(v)
+    fn wrap_pooled(v: &[f32]) -> Storage {
+        let mut buf = take_f32();
+        buf.extend_from_slice(v);
+        Storage::F32(buf)
     }
     fn unwrap(lit: &Literal) -> Option<Vec<f32>> {
         match &lit.data {
@@ -66,8 +108,10 @@ impl native::Sealed for f32 {
 impl NativeType for f32 {}
 
 impl native::Sealed for i32 {
-    fn wrap(v: Vec<i32>) -> Storage {
-        Storage::S32(v)
+    fn wrap_pooled(v: &[i32]) -> Storage {
+        let mut buf = take_s32();
+        buf.extend_from_slice(v);
+        Storage::S32(buf)
     }
     fn unwrap(lit: &Literal) -> Option<Vec<i32>> {
         match &lit.data {
@@ -79,10 +123,16 @@ impl native::Sealed for i32 {
 impl NativeType for i32 {}
 
 #[doc(hidden)]
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub enum Storage {
     F32(Vec<f32>),
     S32(Vec<i32>),
+}
+
+impl Default for Storage {
+    fn default() -> Storage {
+        Storage::F32(Vec::new())
+    }
 }
 
 impl Storage {
@@ -92,20 +142,64 @@ impl Storage {
             Storage::S32(v) => v.len(),
         }
     }
+
+    /// Copy into pool-recycled buffers (the [`Literal`] clone path).
+    fn clone_pooled(&self) -> Storage {
+        match self {
+            Storage::F32(v) => {
+                let mut buf = take_f32();
+                buf.extend_from_slice(v);
+                Storage::F32(buf)
+            }
+            Storage::S32(v) => {
+                let mut buf = take_s32();
+                buf.extend_from_slice(v);
+                Storage::S32(buf)
+            }
+        }
+    }
+
+    /// Hand the backing buffer to this thread's pool.
+    fn recycle(self) {
+        match self {
+            Storage::F32(v) => give_f32(v),
+            Storage::S32(v) => give_s32(v),
+        }
+    }
 }
 
 /// Host literal: typed buffer + dims. Fully functional (the marshalling
-/// half of the engine is real even under the stub).
-#[derive(Clone, Debug)]
+/// half of the engine is real even under the stub). Construction, clone
+/// and drop all cycle their buffers through this thread's pools, so
+/// literal churn in a steady-state loop stops allocating once the pools
+/// are warm.
+#[derive(Debug)]
 pub struct Literal {
     data: Storage,
     dims: Vec<i64>,
 }
 
+impl Clone for Literal {
+    fn clone(&self) -> Literal {
+        let mut dims = take_dims();
+        dims.extend_from_slice(&self.dims);
+        Literal { data: self.data.clone_pooled(), dims }
+    }
+}
+
+impl Drop for Literal {
+    fn drop(&mut self) {
+        std::mem::take(&mut self.data).recycle();
+        give_dims(std::mem::take(&mut self.dims));
+    }
+}
+
 impl Literal {
     /// Rank-1 literal from a host slice.
     pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
-        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+        let mut dims = take_dims();
+        dims.push(v.len() as i64);
+        Literal { dims, data: T::wrap_pooled(v) }
     }
 
     /// Reshape; element count must be preserved (`[]` = scalar).
@@ -117,7 +211,9 @@ impl Literal {
                 "reshape: {have} elems into {dims:?}"
             )));
         }
-        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+        let mut d = take_dims();
+        d.extend_from_slice(dims);
+        Ok(Literal { data: self.data.clone_pooled(), dims: d })
     }
 
     pub fn to_tuple(self) -> Result<Vec<Literal>> {
@@ -214,6 +310,21 @@ mod tests {
         let client = PjRtClient::cpu().unwrap();
         let err = client.compile(&XlaComputation).unwrap_err();
         assert!(format!("{err:?}").contains("stub xla crate"));
+    }
+
+    #[test]
+    fn pooled_buffers_are_reused() {
+        // Drop a literal, then build one of the same shape: the second
+        // must inherit the first's (grown) buffer from the pool.
+        let data: Vec<f32> = (0..64).map(|x| x as f32).collect();
+        drop(Literal::vec1(&data));
+        let lit = Literal::vec1(&data);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        // clones are pooled copies, not shared storage
+        let c = lit.clone();
+        drop(lit);
+        assert_eq!(c.to_vec::<f32>().unwrap(), data);
+        assert_eq!(c.dims(), &[64]);
     }
 
     #[test]
