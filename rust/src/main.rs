@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   experiment   regenerate a paper table/figure (see DESIGN.md §5)
 //!   train        one training run with explicit flags
-//!   analyze      trace/report analytics (critical path, drift, workers)
+//!   analyze      trace/report analytics (critical path, drift, workers),
+//!                trace diffing (--diff) and the CI trend ring (--trend)
 //!   diff-report  compare two run reports; the CI perf-regression gate
 //!   data-stats   print synthetic dataset statistics (Table 4 shape)
 //!   partition    partition quality report across algorithms
@@ -61,6 +62,8 @@ fn usage() -> String {
          \x20       [--micro-batches M] [--workers W] [--fill-cache-mb MB] [--curve]\n\
          \x20       [--report-json FILE] [--trace-out FILE] [--log-every N]\n\
          \x20 analyze --trace FILE | --report FILE [--top N] [--json FILE]\n\
+         \x20 analyze --diff <base.jsonl> <cand.jsonl> [--slow-step-pct PCT] [--json FILE]\n\
+         \x20 analyze --trend RING [--append REPORT --label L --cap N] [--json FILE]\n\
          \x20 diff-report <baseline.json> <candidate.json> [--fail-on-regression PCT] [--json FILE]\n\
          \x20 data-stats [--graphs N]\n\
          \x20 partition [--alg ALG] [--max-size N]\n\
@@ -192,26 +195,95 @@ fn cmd_train(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_analyze(argv: &[String]) -> Result<()> {
-    let cli = Cli::new("gst analyze", "trace/report analytics")
+    let cli = Cli::new("gst analyze", "trace/report/trend analytics")
         .opt("trace", None, "JSONL trace from `gst train --trace-out`")
         .opt("report", None, "run report from `gst train --report-json`")
+        .switch(
+            "diff",
+            "diff two traces (positional: base.jsonl cand.jsonl) and \
+             localize the regression by step range and phase",
+        )
+        .opt(
+            "slow-step-pct",
+            Some("20"),
+            "--diff: a step counts as regressed past this percent",
+        )
+        .opt("trend", None, "trend ring file to analyze (and append to)")
+        .opt(
+            "append",
+            None,
+            "--trend: sample this run report into the ring first",
+        )
+        .opt("label", Some("run"), "--append: label for the new entry")
+        .opt("cap", Some("50"), "--append: max ring entries before rotation")
         .opt("top", Some("5"), "slowest steps to list")
         .opt("json", None, "also write the analysis document to FILE");
     let args = cli.parse(argv).map_err(|e| anyhow!(e))?;
     let top = args.get_usize("top").map_err(|e| anyhow!(e))?;
-    let doc = match (args.get("trace"), args.get("report")) {
-        (Some(path), None) => {
-            let text = std::fs::read_to_string(path)
-                .with_context(|| format!("reading trace {path}"))?;
-            analyze::analyze_trace(&text, top).map_err(|e| anyhow!(e))?
+    let (doc, text) = if args.get_bool("diff") {
+        let [base_path, cand_path] = args.positional.as_slice() else {
+            bail!(
+                "usage: gst analyze --diff <base.jsonl> <candidate.jsonl>"
+            );
+        };
+        let pct =
+            args.get_f64("slow-step-pct").map_err(|e| anyhow!(e))?;
+        let base = std::fs::read_to_string(base_path)
+            .with_context(|| format!("reading trace {base_path}"))?;
+        let cand = std::fs::read_to_string(cand_path)
+            .with_context(|| format!("reading trace {cand_path}"))?;
+        let doc = analyze::diff_traces(&base, &cand, pct)
+            .map_err(|e| anyhow!(e))?;
+        let text = analyze::render_trace_diff(&doc);
+        (doc, text)
+    } else if let Some(ring_path) = args.get("trend") {
+        // a missing ring file starts fresh only when appending
+        let mut ring = match std::fs::read_to_string(ring_path) {
+            Ok(text) => Json::parse(&text)
+                .map_err(|e| anyhow!("parsing {ring_path}: {e}"))?,
+            Err(_) if args.get("append").is_some() => analyze::trend_new(
+                args.get_usize("cap").map_err(|e| anyhow!(e))?,
+            ),
+            Err(e) => bail!("reading ring {ring_path}: {e}"),
+        };
+        if let Some(report_path) = args.get("append") {
+            let report = read_json(report_path)?;
+            ring = analyze::trend_append(
+                &ring,
+                &report,
+                args.get("label").unwrap(),
+                args.get_usize("cap").map_err(|e| anyhow!(e))?,
+            )
+            .map_err(|e| anyhow!(e))?;
+            std::fs::write(ring_path, ring.to_string())
+                .with_context(|| format!("writing ring {ring_path}"))?;
+            println!("ring updated: {ring_path}");
         }
-        (None, Some(path)) => {
-            let report = read_json(path)?;
-            analyze::analyze_report(&report).map_err(|e| anyhow!(e))?
-        }
-        _ => bail!("pass exactly one of --trace FILE or --report FILE"),
+        let doc =
+            analyze::trend_analyze(&ring).map_err(|e| anyhow!(e))?;
+        let text = analyze::render_trend(&doc);
+        (doc, text)
+    } else {
+        let doc = match (args.get("trace"), args.get("report")) {
+            (Some(path), None) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading trace {path}"))?;
+                analyze::analyze_trace(&text, top)
+                    .map_err(|e| anyhow!(e))?
+            }
+            (None, Some(path)) => {
+                let report = read_json(path)?;
+                analyze::analyze_report(&report).map_err(|e| anyhow!(e))?
+            }
+            _ => bail!(
+                "pass one of --trace FILE, --report FILE, \
+                 --diff <base> <cand>, or --trend RING"
+            ),
+        };
+        let text = analyze::render_analysis(&doc);
+        (doc, text)
     };
-    print!("{}", analyze::render_analysis(&doc));
+    print!("{text}");
     if let Some(path) = args.get("json") {
         std::fs::write(path, doc.to_string())
             .with_context(|| format!("writing analysis {path}"))?;

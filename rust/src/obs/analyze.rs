@@ -2,7 +2,7 @@
 //! artifacts PR 3's emit side produces — JSONL traces and
 //! `gst-run-report` documents — into answers.
 //!
-//! Three entry points, all pure functions over [`Json`] (no I/O, so the
+//! Entry points, all pure functions over [`Json`] (no I/O, so the
 //! CLI, tests and CI wrap them freely):
 //!
 //! * [`analyze_trace`] — per-step critical path, phase self-time
@@ -10,11 +10,17 @@
 //!   steps with phase attribution, and staleness / SED-drop drift
 //!   (EWMA with threshold warnings) from the `epoch_*` trace points;
 //! * [`analyze_report`] — the same drift + phase shares computed from a
-//!   run-report document (v1 **or** v2 — the reader tolerates both);
+//!   run-report document (v1–v3 — the reader tolerates all);
 //! * [`diff_reports`] — field-by-field comparison of two run reports
 //!   (step p50/p95/steady-mean, phase totals, cache hit rates, worker
 //!   imbalance, lock-wait totals) with a `--fail-on-regression`
-//!   percentage; the CI perf-regression gate is exactly this function.
+//!   percentage; the CI perf-regression gate is exactly this function;
+//! * [`diff_traces`] — step-by-step comparison of two JSONL traces
+//!   (aligned by step *index*) that localizes a regression to the step
+//!   ranges and dominant phase where it concentrates;
+//! * [`trend_append`] / [`trend_analyze`] — the committed bounded ring
+//!   of per-run report samples (`rust/baselines/trend_ring.json`) that
+//!   makes drift visible across commits, not just against one baseline.
 
 use std::collections::BTreeMap;
 
@@ -34,9 +40,19 @@ const MIN_TIME_MS: f64 = 0.05;
 const MIN_RATE: f64 = 0.01;
 
 /// Report schemas the readers accept (v1 predates the worker/contention
-/// sections; every v1 field kept its meaning in v2).
-pub const REPORT_SCHEMAS: [&str; 2] =
-    ["gst-run-report/v1", "gst-run-report/v2"];
+/// sections, v3 adds `contention.by_phase`; every field kept its
+/// meaning across versions, so readers accept all three).
+pub const REPORT_SCHEMAS: [&str; 3] =
+    ["gst-run-report/v1", "gst-run-report/v2", "gst-run-report/v3"];
+
+/// Schema of the committed trend ring (`rust/baselines/trend_ring.json`).
+pub const TREND_RING_SCHEMA: &str = "gst-trend-ring/v1";
+/// Default bounded ring size: appends past this rotate the oldest
+/// entry out, so the committed file can never grow without bound.
+pub const TREND_RING_DEFAULT_CAP: usize = 50;
+/// Trailing worsening deltas that count as monotone drift (3 deltas =
+/// 4 entries each strictly worse than the one before).
+const TREND_MONOTONE_RUN: usize = 3;
 
 /// In-step leaf phases, in commit order (the remaining phases — `step`,
 /// `eval`, `finetune` — are not step-internal).
@@ -125,19 +141,36 @@ impl StepAgg {
     }
 }
 
-/// Analyze a JSONL trace (the `--trace-out` stream) into a
-/// `gst-trace-analysis/v1` document. Unknown event kinds are tolerated;
-/// malformed JSON lines are an error (a truncated trace should be loud).
-pub fn analyze_trace(text: &str, top_k: usize) -> Result<Json, String> {
-    let mut spans = 0usize;
-    let mut points = 0usize;
-    let mut phase_tot: BTreeMap<String, (f64, u64)> = BTreeMap::new();
-    let mut steps: BTreeMap<u64, StepAgg> = BTreeMap::new();
-    let mut worker_tot: BTreeMap<i64, f64> = BTreeMap::new();
-    // (epoch, coverage, mean staleness)
-    let mut stale_epochs: Vec<(f64, f64, f64)> = Vec::new();
-    // (epoch, cumulative stale_total, cumulative stale_dropped)
-    let mut sed_epochs: Vec<(f64, f64, f64)> = Vec::new();
+/// Everything [`parse_trace`] extracts from one JSONL trace — the
+/// shared substrate of [`analyze_trace`] and [`diff_traces`].
+#[derive(Default)]
+struct TraceData {
+    spans: usize,
+    points: usize,
+    /// per-phase (total µs, call count) over the whole trace
+    phase_tot: BTreeMap<String, (f64, u64)>,
+    /// per-step aggregates, keyed (and ordered) by step id
+    steps: BTreeMap<u64, StepAgg>,
+    /// span-attributed busy per worker id, µs
+    worker_tot: BTreeMap<i64, f64>,
+    /// (epoch, coverage, mean staleness)
+    stale_epochs: Vec<(f64, f64, f64)>,
+    /// (epoch, cumulative stale_total, cumulative stale_dropped)
+    sed_epochs: Vec<(f64, f64, f64)>,
+}
+
+/// Parse a JSONL trace (the `--trace-out` stream). Unknown event kinds
+/// are tolerated; malformed JSON lines are an error (a truncated trace
+/// should be loud).
+fn parse_trace(text: &str) -> Result<TraceData, String> {
+    let mut t = TraceData::default();
+    let spans = &mut t.spans;
+    let points = &mut t.points;
+    let phase_tot = &mut t.phase_tot;
+    let steps = &mut t.steps;
+    let worker_tot = &mut t.worker_tot;
+    let stale_epochs = &mut t.stale_epochs;
+    let sed_epochs = &mut t.sed_epochs;
     for (lineno, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
             continue;
@@ -146,7 +179,7 @@ pub fn analyze_trace(text: &str, top_k: usize) -> Result<Json, String> {
             .map_err(|e| format!("trace line {}: {e}", lineno + 1))?;
         match ev.get("ev").and_then(|v| v.as_str()) {
             Some("span") => {
-                spans += 1;
+                *spans += 1;
                 let phase = ev
                     .get("phase")
                     .and_then(|p| p.as_str())
@@ -185,7 +218,7 @@ pub fn analyze_trace(text: &str, top_k: usize) -> Result<Json, String> {
                 }
             }
             Some("point") => {
-                points += 1;
+                *points += 1;
                 let name =
                     ev.get("name").and_then(|n| n.as_str()).unwrap_or("");
                 let data = ev.get("data").cloned().unwrap_or(Json::Null);
@@ -209,6 +242,21 @@ pub fn analyze_trace(text: &str, top_k: usize) -> Result<Json, String> {
             _ => {}
         }
     }
+    Ok(t)
+}
+
+/// Analyze a JSONL trace (the `--trace-out` stream) into a
+/// `gst-trace-analysis/v1` document.
+pub fn analyze_trace(text: &str, top_k: usize) -> Result<Json, String> {
+    let TraceData {
+        spans,
+        points,
+        phase_tot,
+        steps,
+        worker_tot,
+        stale_epochs,
+        sed_epochs,
+    } = parse_trace(text)?;
 
     // step wall-clock stats, in step-id order
     let durs_ms: Vec<f64> =
@@ -262,13 +310,25 @@ pub fn analyze_trace(text: &str, top_k: usize) -> Result<Json, String> {
         ),
     ]);
 
-    // critical path, aggregated over steps
+    // critical path, aggregated over steps; the stall residual (step
+    // wall-clock minus critical path) is clamped to zero *per step* —
+    // spans that overlap (a worker busy past the commit boundary) drive
+    // a step's residual negative, and summing before clamping would let
+    // one overlapping step silently eat another step's genuine stall
     let (mut cp_sample, mut cp_compute, mut cp_commit) = (0.0, 0.0, 0.0);
+    let mut stall_us = 0.0f64;
+    let mut clamped_steps = 0u64;
     for agg in steps.values() {
         let (s, c, t) = agg.critical_us();
         cp_sample += s;
         cp_compute += c;
         cp_commit += t;
+        let resid = agg.dur_us - (s + c + t);
+        if resid < 0.0 {
+            clamped_steps += 1;
+        } else {
+            stall_us += resid;
+        }
     }
     let critical_ms = (cp_sample + cp_compute + cp_commit) / 1e3;
     let critical_json = Json::obj(vec![
@@ -276,10 +336,8 @@ pub fn analyze_trace(text: &str, top_k: usize) -> Result<Json, String> {
         ("compute_ms", Json::num(cp_compute / 1e3)),
         ("commit_ms", Json::num(cp_commit / 1e3)),
         ("critical_ms", Json::num(critical_ms)),
-        (
-            "stall_ms",
-            Json::num((step_total_ms - critical_ms).max(0.0)),
-        ),
+        ("stall_ms", Json::num(stall_us / 1e3)),
+        ("clamped_steps", Json::num(clamped_steps as f64)),
     ]);
 
     // span-attributed worker busy (worker ids are dense from 0, but a
@@ -349,23 +407,31 @@ pub fn analyze_trace(text: &str, top_k: usize) -> Result<Json, String> {
 }
 
 /// Staleness drift section shared by the trace and report analyzers:
-/// per-epoch means with their EWMA, plus threshold warnings.
+/// per-epoch means with the EWMA baseline each was compared against,
+/// plus threshold warnings.
+///
+/// The emitted `ewma` is the *prior* epoch's EWMA — the baseline the
+/// warning check uses. Emitting the EWMA with the epoch already folded
+/// in (the old behavior) damped every excursion by (1 − α) and made the
+/// rendered series disagree with the warnings derived from it.
 fn staleness_drift(
     epochs: &[(f64, f64, f64)],
     means: &[f64],
 ) -> Json {
     let ewma = ewma_series(means);
+    let baseline =
+        |i: usize| if i == 0 { ewma[0] } else { ewma[i - 1] };
     let mut warnings = Vec::new();
     for i in 1..means.len() {
-        if ewma[i - 1] > 1e-9
-            && means[i] > ewma[i - 1] * STALENESS_DRIFT_FACTOR
+        if baseline(i) > 1e-9
+            && means[i] > baseline(i) * STALENESS_DRIFT_FACTOR
         {
             warnings.push(Json::str(&format!(
                 "staleness drift at epoch {}: mean {:.2} exceeds \
                  EWMA {:.2} by more than {:.0}%",
                 epochs[i].0,
                 means[i],
-                ewma[i - 1],
+                baseline(i),
                 (STALENESS_DRIFT_FACTOR - 1.0) * 100.0
             )));
         }
@@ -373,13 +439,13 @@ fn staleness_drift(
     Json::obj(vec![
         (
             "epochs",
-            Json::arr(epochs.iter().zip(&ewma).map(
-                |(&(epoch, coverage, mean), &e)| {
+            Json::arr(epochs.iter().take(ewma.len()).enumerate().map(
+                |(i, &(epoch, coverage, mean))| {
                     Json::obj(vec![
                         ("epoch", Json::num(epoch)),
                         ("coverage", Json::num(coverage)),
                         ("mean", Json::num(mean)),
-                        ("ewma", Json::num(e)),
+                        ("ewma", Json::num(baseline(i))),
                     ])
                 },
             )),
@@ -402,24 +468,28 @@ fn sed_drift(cumulative: &[(f64, f64, f64)]) -> Json {
         (prev_t, prev_d) = (t, d);
     }
     let ewma = ewma_series(&rates);
+    // like `staleness_drift`: the emitted `ewma` is the prior-epoch
+    // baseline the warning compares against, not the post-fold value
+    let baseline =
+        |i: usize| if i == 0 { ewma[0] } else { ewma[i - 1] };
     let mut warnings = Vec::new();
     for i in 1..rates.len() {
-        if (rates[i] - ewma[i - 1]).abs() > SED_DRIFT_ABS {
+        if (rates[i] - baseline(i)).abs() > SED_DRIFT_ABS {
             warnings.push(Json::str(&format!(
                 "SED drop-rate drift at epoch {}: {:.3} vs EWMA {:.3}",
-                cumulative[i].0, rates[i], ewma[i - 1]
+                cumulative[i].0, rates[i], baseline(i)
             )));
         }
     }
     Json::obj(vec![
         (
             "epochs",
-            Json::arr(cumulative.iter().zip(rates.iter().zip(&ewma)).map(
-                |(&(epoch, _, _), (&rate, &e))| {
+            Json::arr(cumulative.iter().take(ewma.len()).enumerate().map(
+                |(i, &(epoch, _, _))| {
                     Json::obj(vec![
                         ("epoch", Json::num(epoch)),
-                        ("drop_rate", Json::num(rate)),
-                        ("ewma", Json::num(e)),
+                        ("drop_rate", Json::num(rates[i])),
+                        ("ewma", Json::num(baseline(i))),
                     ])
                 },
             )),
@@ -430,10 +500,11 @@ fn sed_drift(cumulative: &[(f64, f64, f64)]) -> Json {
 
 // -- report analysis -----------------------------------------------------
 
-/// Analyze a `gst-run-report` document (v1 or v2) into a
+/// Analyze a `gst-run-report` document (v1–v3) into a
 /// `gst-report-analysis/v1` summary: phase shares of step wall-clock,
 /// cache hit rates, staleness drift, and — when the report carries them
-/// (v2) — the worker/contention sections verbatim.
+/// (v2+) — the worker/contention sections verbatim (v3's contention
+/// includes the per-phase lock-wait split).
 pub fn analyze_report(doc: &Json) -> Result<Json, String> {
     let schema = check_report_schema(doc)?.to_string();
     let step_ms = num_at(doc, "phases.step.total_ms").unwrap_or(0.0);
@@ -531,8 +602,12 @@ struct DiffField {
 
 /// Compare two run reports field-by-field. A field regresses when it
 /// moved in its worse direction by more than `fail_pct` percent
-/// (relative to baseline); fields whose baseline sits under a noise
-/// floor are reported but never counted as regressions. Returns the
+/// (relative to baseline). Fields whose baseline sits under the noise
+/// floor get no relative verdict (a near-zero denominator makes every
+/// delta "infinite percent"), but they are *not* blind: a higher-worse
+/// candidate that itself crosses the floor by more than the fail margin
+/// is an absolute regression — without this fallback, a baseline of 0.0
+/// could never fail no matter how large the candidate grew. Returns the
 /// `gst-report-diff/v1` document; `pass` is false iff any field
 /// regressed.
 pub fn diff_reports(
@@ -590,12 +665,20 @@ pub fn diff_reports(
         } else {
             0.0
         };
-        let worse = if f.worse_when_higher {
-            delta_pct > fail_pct
+        let regression = if measurable {
+            if f.worse_when_higher {
+                delta_pct > fail_pct
+            } else {
+                delta_pct < -fail_pct
+            }
         } else {
-            delta_pct < -fail_pct
+            // absolute fallback for sub-floor baselines: a higher-worse
+            // candidate clearing the floor by the fail margin regressed
+            // even though no relative delta exists (lower-worse fields
+            // can't meaningfully regress from a near-zero base)
+            f.worse_when_higher
+                && f.cand > f.floor * (1.0 + fail_pct / 100.0)
         };
-        let regression = measurable && worse;
         if regression {
             regressions.push(f.name.clone());
         }
@@ -604,6 +687,7 @@ pub fn diff_reports(
             ("base", Json::num(f.base)),
             ("candidate", Json::num(f.cand)),
             ("delta_pct", Json::num(delta_pct)),
+            ("measurable", Json::Bool(measurable)),
             (
                 "worse_direction",
                 Json::str(if f.worse_when_higher { "up" } else { "down" }),
@@ -621,6 +705,324 @@ pub fn diff_reports(
             Json::arr(regressions.iter().map(|r| Json::str(r))),
         ),
         ("pass", Json::Bool(pass)),
+    ]))
+}
+
+// -- trace diffing (regression localization) -----------------------------
+
+/// Diff two JSONL traces step-by-step into a `gst-trace-diff/v1`
+/// document, localizing where a regression concentrates.
+///
+/// Steps are aligned by *index* in step-id order, not by id: micro-batch
+/// grouping strides step ids by the group size, so index alignment
+/// compares the i-th optimizer step of each run even when the runs used
+/// different groupings. A step regresses when its candidate duration
+/// exceeds base by more than `slow_pct` percent (and by more than the
+/// [`MIN_TIME_MS`] noise floor in absolute terms); consecutive regressed
+/// indices are grouped into hotspot ranges, each attributed to the phase
+/// whose self-time grew the most over the range.
+///
+/// This is a localization tool, not a gate — `regressed` counts are
+/// informational and the CLI never fails on them (the report diff is
+/// the gate).
+pub fn diff_traces(
+    base_text: &str,
+    cand_text: &str,
+    slow_pct: f64,
+) -> Result<Json, String> {
+    let base = parse_trace(base_text)
+        .map_err(|e| format!("base trace: {e}"))?;
+    let cand = parse_trace(cand_text)
+        .map_err(|e| format!("candidate trace: {e}"))?;
+    let b_steps: Vec<(&u64, &StepAgg)> = base.steps.iter().collect();
+    let c_steps: Vec<(&u64, &StepAgg)> = cand.steps.iter().collect();
+    let n = b_steps.len().min(c_steps.len());
+    let floor_us = MIN_TIME_MS * 1e3;
+
+    // per-step verdicts over the compared prefix
+    let mut deltas_us = Vec::with_capacity(n);
+    let mut regressed = Vec::with_capacity(n);
+    for i in 0..n {
+        let d = c_steps[i].1.dur_us - b_steps[i].1.dur_us;
+        regressed.push(
+            d > (b_steps[i].1.dur_us * slow_pct / 100.0).max(floor_us),
+        );
+        deltas_us.push(d);
+    }
+    let regressed_count = regressed.iter().filter(|&&r| r).count();
+
+    // group consecutive regressed indices into hotspot ranges
+    let mut hotspots = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if !regressed[i] {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < n && regressed[i] {
+            i += 1;
+        }
+        let end = i - 1; // inclusive
+        let delta_us: f64 = deltas_us[start..=end].iter().sum();
+        let mut dominant = ("none", 0.0f64);
+        for p in LEAF_PHASES {
+            let mut d = 0.0;
+            for k in start..=end {
+                d += c_steps[k].1.leaf(p) - b_steps[k].1.leaf(p);
+            }
+            if d > dominant.1 {
+                dominant = (p, d);
+            }
+        }
+        hotspots.push(Json::obj(vec![
+            ("start_index", Json::num(start as f64)),
+            ("end_index", Json::num(end as f64)),
+            // base step ids name the range for humans
+            ("start_step", Json::num(*b_steps[start].0 as f64)),
+            ("end_step", Json::num(*b_steps[end].0 as f64)),
+            ("steps", Json::num((end - start + 1) as f64)),
+            ("delta_ms", Json::num(delta_us / 1e3)),
+            ("dominant_phase", Json::str(dominant.0)),
+            ("dominant_delta_ms", Json::num(dominant.1 / 1e3)),
+        ]));
+    }
+
+    // totals and per-phase deltas over the compared prefix
+    let base_ms: f64 =
+        b_steps[..n].iter().map(|(_, a)| a.dur_us).sum::<f64>() / 1e3;
+    let cand_ms: f64 =
+        c_steps[..n].iter().map(|(_, a)| a.dur_us).sum::<f64>() / 1e3;
+    let total_delta_pct = if base_ms > MIN_TIME_MS {
+        100.0 * (cand_ms - base_ms) / base_ms
+    } else {
+        0.0
+    };
+    let phases_json = Json::Obj(
+        LEAF_PHASES
+            .iter()
+            .map(|&p| {
+                let b: f64 = b_steps[..n]
+                    .iter()
+                    .map(|(_, a)| a.leaf(p))
+                    .sum::<f64>()
+                    / 1e3;
+                let c: f64 = c_steps[..n]
+                    .iter()
+                    .map(|(_, a)| a.leaf(p))
+                    .sum::<f64>()
+                    / 1e3;
+                let pct = if b > MIN_TIME_MS {
+                    100.0 * (c - b) / b
+                } else {
+                    0.0
+                };
+                (
+                    p.to_string(),
+                    Json::obj(vec![
+                        ("base_ms", Json::num(b)),
+                        ("cand_ms", Json::num(c)),
+                        ("delta_ms", Json::num(c - b)),
+                        ("delta_pct", Json::num(pct)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let (mut bc, mut cc) = ([0.0f64; 3], [0.0f64; 3]);
+    for (_, a) in &b_steps[..n] {
+        let (s, c, t) = a.critical_us();
+        bc[0] += s;
+        bc[1] += c;
+        bc[2] += t;
+    }
+    for (_, a) in &c_steps[..n] {
+        let (s, c, t) = a.critical_us();
+        cc[0] += s;
+        cc[1] += c;
+        cc[2] += t;
+    }
+    let critical_json = Json::obj(vec![
+        ("sample_delta_ms", Json::num((cc[0] - bc[0]) / 1e3)),
+        ("compute_delta_ms", Json::num((cc[1] - bc[1]) / 1e3)),
+        ("commit_delta_ms", Json::num((cc[2] - bc[2]) / 1e3)),
+    ]);
+
+    Ok(Json::obj(vec![
+        ("schema", Json::str("gst-trace-diff/v1")),
+        ("slow_step_pct", Json::num(slow_pct)),
+        (
+            "steps",
+            Json::obj(vec![
+                ("base_count", Json::num(b_steps.len() as f64)),
+                ("cand_count", Json::num(c_steps.len() as f64)),
+                ("compared", Json::num(n as f64)),
+                ("regressed", Json::num(regressed_count as f64)),
+            ]),
+        ),
+        (
+            "totals",
+            Json::obj(vec![
+                ("base_ms", Json::num(base_ms)),
+                ("cand_ms", Json::num(cand_ms)),
+                ("delta_ms", Json::num(cand_ms - base_ms)),
+                ("delta_pct", Json::num(total_delta_pct)),
+            ]),
+        ),
+        ("critical_path", critical_json),
+        ("phases", phases_json),
+        ("hotspots", Json::Arr(hotspots)),
+    ]))
+}
+
+// -- trend ring (drift across commits) -----------------------------------
+
+/// Fields each ring entry samples from a run report:
+/// (flat entry key, dotted report path, worse-when-higher).
+const TREND_FIELDS: [(&str, &str, bool); 7] = [
+    ("steady_mean_ms", "steps.steady_mean_ms", true),
+    ("p50_ms", "steps.p50_ms", true),
+    ("p95_ms", "steps.p95_ms", true),
+    ("total_wait_ms", "contention.total_wait_ms", true),
+    ("table_writeback_ms", "contention.table_writeback_ms", true),
+    ("imbalance_pct", "workers.imbalance_pct", true),
+    ("fill_hit_rate", "caches.fill.hit_rate", false),
+];
+
+/// A fresh empty ring document with the given capacity.
+pub fn trend_new(cap: usize) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str(TREND_RING_SCHEMA)),
+        ("cap", Json::num(cap.max(1) as f64)),
+        ("entries", Json::Arr(Vec::new())),
+    ])
+}
+
+fn check_ring_schema(ring: &Json) -> Result<(), String> {
+    let schema = ring
+        .get("schema")
+        .and_then(|s| s.as_str())
+        .ok_or("ring has no `schema` key — not a gst-trend-ring")?;
+    if schema == TREND_RING_SCHEMA {
+        Ok(())
+    } else {
+        Err(format!(
+            "unsupported ring schema `{schema}` \
+             (accepted: {TREND_RING_SCHEMA})"
+        ))
+    }
+}
+
+/// Append one run report's sample to the ring (pure: returns the new
+/// ring document), rotating the oldest entries out past `cap`. Labels
+/// are caller-chosen (CI passes the commit SHA); the ring stays
+/// timestamp-free so re-running the same append is deterministic.
+pub fn trend_append(
+    ring: &Json,
+    report: &Json,
+    label: &str,
+    cap: usize,
+) -> Result<Json, String> {
+    check_ring_schema(ring)?;
+    check_report_schema(report)?;
+    let mut entry = vec![("label", Json::str(label))];
+    for (key, path, _) in TREND_FIELDS {
+        if let Some(v) = num_at(report, path) {
+            entry.push((key, Json::num(v)));
+        }
+    }
+    let mut entries: Vec<Json> = ring
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .map(|a| a.to_vec())
+        .unwrap_or_default();
+    entries.push(Json::obj(entry));
+    let cap = cap.max(1);
+    while entries.len() > cap {
+        entries.remove(0);
+    }
+    Ok(Json::obj(vec![
+        ("schema", Json::str(TREND_RING_SCHEMA)),
+        ("cap", Json::num(cap as f64)),
+        ("entries", Json::Arr(entries)),
+    ]))
+}
+
+/// Analyze a trend ring into a `gst-trend-analysis/v1` document:
+/// per-field series with first → last deltas, plus a monotone-drift
+/// warning when a field worsened strictly for the trailing
+/// [`TREND_MONOTONE_RUN`]+ deltas — slow creep that no single
+/// baseline diff would ever flag.
+pub fn trend_analyze(ring: &Json) -> Result<Json, String> {
+    check_ring_schema(ring)?;
+    let empty: Vec<Json> = Vec::new();
+    let entries = ring
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .unwrap_or(&empty);
+    let labels = Json::arr(entries.iter().map(|e| {
+        e.get("label").cloned().unwrap_or(Json::Null)
+    }));
+    let mut fields: Vec<(String, Json)> = Vec::new();
+    let mut warnings = Vec::new();
+    for (key, _, higher_worse) in TREND_FIELDS {
+        let series: Vec<f64> =
+            entries.iter().filter_map(|e| num_at(e, key)).collect();
+        if series.is_empty() {
+            continue;
+        }
+        let (first, last) = (series[0], series[series.len() - 1]);
+        let delta_pct = if first.abs() > 1e-12 {
+            100.0 * (last - first) / first
+        } else {
+            0.0
+        };
+        // length of the strictly-worsening run ending at the tail
+        let mut run = 0usize;
+        for i in (1..series.len()).rev() {
+            let worse = if higher_worse {
+                series[i] > series[i - 1]
+            } else {
+                series[i] < series[i - 1]
+            };
+            if worse {
+                run += 1;
+            } else {
+                break;
+            }
+        }
+        if run >= TREND_MONOTONE_RUN {
+            warnings.push(Json::str(&format!(
+                "monotone drift in {key}: {} consecutive {} entries \
+                 (now {last:.3})",
+                run + 1,
+                if higher_worse { "rising" } else { "falling" },
+            )));
+        }
+        fields.push((
+            key.to_string(),
+            Json::obj(vec![
+                (
+                    "series",
+                    Json::arr(series.iter().map(|&v| Json::num(v))),
+                ),
+                ("first", Json::num(first)),
+                ("last", Json::num(last)),
+                ("delta_pct", Json::num(delta_pct)),
+                ("monotone_run", Json::num(run as f64)),
+                (
+                    "worse_direction",
+                    Json::str(if higher_worse { "up" } else { "down" }),
+                ),
+            ]),
+        ));
+    }
+    Ok(Json::obj(vec![
+        ("schema", Json::str("gst-trend-analysis/v1")),
+        ("entries", Json::num(entries.len() as f64)),
+        ("labels", labels),
+        ("fields", Json::Obj(fields.into_iter().collect())),
+        ("warnings", Json::Arr(warnings)),
     ]))
 }
 
@@ -682,6 +1084,13 @@ pub fn render_analysis(a: &Json) -> String {
             g("critical_ms"),
             g("stall_ms")
         ));
+        let clamped = g("clamped_steps") as u64;
+        if clamped > 0 {
+            out.push_str(&format!(
+                "  warning: {clamped} step(s) had overlapping spans \
+                 (critical path exceeded wall-clock; stall clamped to 0)\n"
+            ));
+        }
     }
     if let Some(w) = a.get("workers").filter(|w| w.as_obj().is_some()) {
         let busy: Vec<String> = w
@@ -719,7 +1128,7 @@ pub fn render_analysis(a: &Json) -> String {
     if let Some(st) = a.get("staleness").filter(|s| s.as_obj().is_some()) {
         if let Some(arr) = st.get("epochs").and_then(|e| e.as_arr()) {
             if !arr.is_empty() {
-                out.push_str("staleness drift (mean / EWMA):\n");
+                out.push_str("staleness drift (mean / prior EWMA):\n");
                 for e in arr {
                     out.push_str(&format!(
                         "  epoch {:>3}  {:.2} / {:.2}\n",
@@ -735,7 +1144,7 @@ pub fn render_analysis(a: &Json) -> String {
     if let Some(sed) = a.get("sed").filter(|s| s.as_obj().is_some()) {
         if let Some(arr) = sed.get("epochs").and_then(|e| e.as_arr()) {
             if !arr.is_empty() {
-                out.push_str("SED drop-rate drift (rate / EWMA):\n");
+                out.push_str("SED drop-rate drift (rate / prior EWMA):\n");
                 for e in arr {
                     out.push_str(&format!(
                         "  epoch {:>3}  {:.3} / {:.3}\n",
@@ -785,6 +1194,125 @@ pub fn render_diff(d: &Json) -> String {
         if pass { "PASS" } else { "FAIL" },
         num_at(d, "fail_on_pct").unwrap_or(0.0)
     ));
+    out
+}
+
+/// Render a `gst-trace-diff/v1` document for the terminal.
+pub fn render_trace_diff(d: &Json) -> String {
+    let mut out = String::new();
+    let g = |k: &str| num_at(d, k).unwrap_or(0.0);
+    out.push_str(&format!(
+        "{}\n",
+        d.get("schema").and_then(|s| s.as_str()).unwrap_or("?")
+    ));
+    out.push_str(&format!(
+        "steps: base {}  cand {}  compared {}  \
+         ({} regressed > {:.0}%)\n",
+        g("steps.base_count") as u64,
+        g("steps.cand_count") as u64,
+        g("steps.compared") as u64,
+        g("steps.regressed") as u64,
+        g("slow_step_pct")
+    ));
+    out.push_str(&format!(
+        "total: {:.3} -> {:.3} ms  (delta {:+.3} ms, {:+.1}%)\n",
+        g("totals.base_ms"),
+        g("totals.cand_ms"),
+        g("totals.delta_ms"),
+        g("totals.delta_pct")
+    ));
+    out.push_str(&format!(
+        "critical-path deltas: sample {:+.3}  compute {:+.3}  \
+         commit {:+.3} ms\n",
+        g("critical_path.sample_delta_ms"),
+        g("critical_path.compute_delta_ms"),
+        g("critical_path.commit_delta_ms")
+    ));
+    if let Some(phases) = d.get("phases").and_then(|p| p.as_obj()) {
+        out.push_str("phase deltas (compared steps):\n");
+        let mut rows: Vec<_> = phases.iter().collect();
+        rows.sort_by(|a, b| {
+            num_at(b.1, "delta_ms")
+                .partial_cmp(&num_at(a.1, "delta_ms"))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for (name, p) in rows {
+            out.push_str(&format!(
+                "  {:<14} {:>9.3} -> {:>9.3} ms  ({:+.3})\n",
+                name,
+                num_at(p, "base_ms").unwrap_or(0.0),
+                num_at(p, "cand_ms").unwrap_or(0.0),
+                num_at(p, "delta_ms").unwrap_or(0.0)
+            ));
+        }
+    }
+    match d.get("hotspots").and_then(|h| h.as_arr()) {
+        Some(hs) if !hs.is_empty() => {
+            out.push_str("hotspots:\n");
+            for h in hs {
+                out.push_str(&format!(
+                    "  steps {}..{} (index {}..{}): {:+.3} ms, \
+                     dominant {} ({:+.3} ms)\n",
+                    num_at(h, "start_step").unwrap_or(0.0) as u64,
+                    num_at(h, "end_step").unwrap_or(0.0) as u64,
+                    num_at(h, "start_index").unwrap_or(0.0) as u64,
+                    num_at(h, "end_index").unwrap_or(0.0) as u64,
+                    num_at(h, "delta_ms").unwrap_or(0.0),
+                    h.get("dominant_phase")
+                        .and_then(|p| p.as_str())
+                        .unwrap_or("?"),
+                    num_at(h, "dominant_delta_ms").unwrap_or(0.0)
+                ));
+            }
+        }
+        _ => {
+            out.push_str(&format!(
+                "hotspots: none (no step regressed beyond {:.0}%)\n",
+                g("slow_step_pct")
+            ));
+        }
+    }
+    out
+}
+
+/// Render a `gst-trend-analysis/v1` document for the terminal. Long
+/// series print only their trailing window — the ring holds up to
+/// [`TREND_RING_DEFAULT_CAP`] entries but the recent shape is what a
+/// human scans for.
+pub fn render_trend(a: &Json) -> String {
+    const TAIL: usize = 8;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{} — {} entries\n",
+        a.get("schema").and_then(|s| s.as_str()).unwrap_or("?"),
+        num_at(a, "entries").unwrap_or(0.0) as u64
+    ));
+    if let Some(fields) = a.get("fields").and_then(|f| f.as_obj()) {
+        for (name, f) in fields {
+            let series: Vec<f64> = f
+                .get("series")
+                .and_then(|s| s.as_arr())
+                .map(|arr| {
+                    arr.iter().filter_map(|v| v.as_f64()).collect()
+                })
+                .unwrap_or_default();
+            let skipped = series.len().saturating_sub(TAIL);
+            let shown: Vec<String> = series[skipped..]
+                .iter()
+                .map(|v| format!("{v:.3}"))
+                .collect();
+            out.push_str(&format!(
+                "  {:<20} {:>10.3} -> {:>10.3}  ({:+.1}%)  [{}{}]\n",
+                name,
+                num_at(f, "first").unwrap_or(0.0),
+                num_at(f, "last").unwrap_or(0.0),
+                num_at(f, "delta_pct").unwrap_or(0.0),
+                if skipped > 0 { "… " } else { "" },
+                shown.join(", ")
+            ));
+        }
+    }
+    fmt_warnings(&mut out, a);
     out
 }
 
@@ -857,6 +1385,49 @@ mod tests {
         let cand = mini_report(0.04, 0.04, 0.8); // huge % on noise floor
         let d = diff_reports(&base, &cand, 20.0).unwrap();
         assert_eq!(d.at("pass").as_bool(), Some(true));
+        // sub-floor rows are marked unmeasurable, not silently zeroed
+        let rows = d.at("fields").as_arr().unwrap();
+        let steady = rows
+            .iter()
+            .find(|r| r.at("field").as_str() == Some("steps.steady_mean_ms"))
+            .unwrap();
+        assert_eq!(steady.at("measurable").as_bool(), Some(false));
+    }
+
+    fn report_with_writeback(writeback: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"schema":"gst-run-report/v3",
+                "steps":{{"steady_mean_ms":5.0,"p50_ms":5.0,"p95_ms":8.0}},
+                "phases":{{"step":{{"total_ms":10.0,"calls":4}}}},
+                "caches":{{"fill":{{"hit_rate":0.8}},
+                           "param_literal":{{"hit_rate":0.9}}}},
+                "contention":{{"total_wait_ms":0.2,
+                               "table_writeback_ms":{writeback}}},
+                "staleness":[]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn sub_floor_baseline_still_fails_on_absolute_blowup() {
+        // regression: base 0.0 has no relative delta, so before the
+        // absolute fallback the candidate could grow without bound and
+        // the gate would stay green
+        let base = report_with_writeback(0.0);
+        let cand = report_with_writeback(50.0);
+        let d = diff_reports(&base, &cand, 20.0).unwrap();
+        assert_eq!(d.at("pass").as_bool(), Some(false));
+        let regs = d.at("regressions").as_arr().unwrap();
+        assert!(regs
+            .iter()
+            .any(|r| r.as_str() == Some("contention.table_writeback_ms")));
+        // identical sub-floor values still self-pass
+        let d = diff_reports(&base, &base, 20.0).unwrap();
+        assert_eq!(d.at("pass").as_bool(), Some(true));
+        // a candidate inside the floor margin is still noise, not a fail
+        let near = report_with_writeback(0.05);
+        let d = diff_reports(&base, &near, 20.0).unwrap();
+        assert_eq!(d.at("pass").as_bool(), Some(true));
     }
 
     #[test]
@@ -893,6 +1464,17 @@ mod tests {
         assert!((fill_pct - 25.0).abs() < 1e-9);
         let v2 = mini_report(5.0, 8.0, 0.8);
         assert!(analyze_report(&v2).is_ok());
+        // v3 (per-phase contention split) is accepted and passed through
+        let v3 = report_with_writeback(1.0);
+        let a = analyze_report(&v3).unwrap();
+        assert_eq!(
+            a.at("source_schema").as_str(),
+            Some("gst-run-report/v3")
+        );
+        assert_eq!(
+            a.at("contention").at("table_writeback_ms").as_f64(),
+            Some(1.0)
+        );
     }
 
     #[test]
@@ -911,6 +1493,39 @@ mod tests {
             (epochs[2].at("drop_rate").as_f64().unwrap() - 0.9).abs()
                 < 1e-12
         );
+        // the emitted ewma is the *prior* epoch's baseline — the value
+        // the warning actually compared 0.9 against (0.5), not the
+        // post-fold 0.62
+        assert!(
+            (epochs[2].at("ewma").as_f64().unwrap() - 0.5).abs() < 1e-12
+        );
+        // row 0 carries its own seed
+        assert!(
+            (epochs[0].at("ewma").as_f64().unwrap() - 0.5).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn staleness_drift_emits_prior_ewma_baseline() {
+        let epochs = [(1.0, 0.5, 2.0), (2.0, 0.8, 3.0), (3.0, 1.0, 3.0)];
+        let means = [2.0, 3.0, 3.0];
+        let j = staleness_drift(&epochs, &means);
+        let rows = j.at("epochs").as_arr().unwrap();
+        assert_eq!(rows[0].at("ewma").as_f64(), Some(2.0));
+        // row 1's baseline is epoch 0's EWMA (2.0), not 0.3·3+0.7·2=2.3
+        assert_eq!(rows[1].at("ewma").as_f64(), Some(2.0));
+        assert!((rows[2].at("ewma").as_f64().unwrap() - 2.3).abs() < 1e-12);
+        // threshold edge: mean exactly at baseline × factor must NOT warn
+        // (the check is strictly greater-than)
+        let epochs = [(1.0, 1.0, 2.0), (2.0, 1.0, 3.0)];
+        let means = [2.0, 3.0];
+        let j = staleness_drift(&epochs, &means);
+        assert!(j.at("warnings").as_arr().unwrap().is_empty());
+        // one epsilon past the edge warns
+        let epochs = [(1.0, 1.0, 2.0), (2.0, 1.0, 3.001)];
+        let means = [2.0, 3.001];
+        let j = staleness_drift(&epochs, &means);
+        assert_eq!(j.at("warnings").as_arr().unwrap().len(), 1);
     }
 
     #[test]
@@ -932,5 +1547,134 @@ mod tests {
         let d = diff_reports(&r, &r, 20.0).unwrap();
         let text = render_diff(&d);
         assert!(text.contains("PASS"));
+    }
+
+    /// Two-step trace: step ids stride by `stride` (micro-batch
+    /// grouping), durations and commit times as given (µs).
+    fn two_step_trace(stride: u64, durs: [f64; 2], commits: [f64; 2]) -> String {
+        let mut out = String::new();
+        for i in 0..2u64 {
+            let id = i * stride;
+            out.push_str(&format!(
+                "{{\"ev\":\"span\",\"phase\":\"table_commit\",\
+                 \"step\":{id},\"dur_us\":{}}}\n",
+                commits[i as usize]
+            ));
+            out.push_str(&format!(
+                "{{\"ev\":\"span\",\"phase\":\"step\",\
+                 \"step\":{id},\"dur_us\":{}}}\n",
+                durs[i as usize]
+            ));
+        }
+        out
+    }
+
+    #[test]
+    fn trace_diff_aligns_by_index_and_localizes_the_phase() {
+        // base ids 0,1; candidate ids 0,4 — index alignment still pairs
+        // the i-th step of each run
+        let base = two_step_trace(1, [1000.0, 1000.0], [100.0, 100.0]);
+        let cand = two_step_trace(4, [1010.0, 1800.0], [110.0, 900.0]);
+        let d = diff_traces(&base, &cand, 20.0).unwrap();
+        assert_eq!(d.at("schema").as_str(), Some("gst-trace-diff/v1"));
+        assert_eq!(d.at("steps").at("compared").as_f64(), Some(2.0));
+        assert_eq!(d.at("steps").at("regressed").as_f64(), Some(1.0));
+        let hs = d.at("hotspots").as_arr().unwrap();
+        assert_eq!(hs.len(), 1);
+        assert_eq!(hs[0].at("start_index").as_f64(), Some(1.0));
+        assert_eq!(hs[0].at("end_index").as_f64(), Some(1.0));
+        assert_eq!(
+            hs[0].at("dominant_phase").as_str(),
+            Some("table_commit")
+        );
+        assert!((hs[0].at("delta_ms").as_f64().unwrap() - 0.8).abs() < 1e-9);
+        let text = render_trace_diff(&d);
+        assert!(text.contains("table_commit"));
+        assert!(text.contains("hotspots:"));
+    }
+
+    #[test]
+    fn trace_diff_without_regression_reports_no_hotspot() {
+        let base = two_step_trace(1, [1000.0, 1000.0], [100.0, 100.0]);
+        let d = diff_traces(&base, &base, 20.0).unwrap();
+        assert_eq!(d.at("steps").at("regressed").as_f64(), Some(0.0));
+        assert!(d.at("hotspots").as_arr().unwrap().is_empty());
+        let text = render_trace_diff(&d);
+        assert!(text.contains("hotspots: none"));
+    }
+
+    #[test]
+    fn overlapping_spans_clamp_per_step_stall() {
+        // step 0: dur 500, sample 100, worker grad 300, commit 200 →
+        // critical 600 > wall-clock 500, residual −100 → clamped;
+        // step 1: dur 900, sample 100, worker grad 300, commit 200 →
+        // residual +300 survives intact instead of being eaten
+        let trace = "\
+{\"ev\":\"span\",\"phase\":\"sample\",\"step\":0,\"dur_us\":100}\n\
+{\"ev\":\"span\",\"phase\":\"grad\",\"step\":0,\"worker\":0,\"dur_us\":300}\n\
+{\"ev\":\"span\",\"phase\":\"table_commit\",\"step\":0,\"dur_us\":200}\n\
+{\"ev\":\"span\",\"phase\":\"step\",\"step\":0,\"dur_us\":500}\n\
+{\"ev\":\"span\",\"phase\":\"sample\",\"step\":1,\"dur_us\":100}\n\
+{\"ev\":\"span\",\"phase\":\"grad\",\"step\":1,\"worker\":0,\"dur_us\":300}\n\
+{\"ev\":\"span\",\"phase\":\"table_commit\",\"step\":1,\"dur_us\":200}\n\
+{\"ev\":\"span\",\"phase\":\"step\",\"step\":1,\"dur_us\":900}\n";
+        let a = analyze_trace(trace, 3).unwrap();
+        let cp = a.at("critical_path");
+        assert_eq!(cp.at("clamped_steps").as_f64(), Some(1.0));
+        assert!((cp.at("stall_ms").as_f64().unwrap() - 0.3).abs() < 1e-9);
+        let text = render_analysis(&a);
+        assert!(text.contains("overlapping spans"));
+    }
+
+    #[test]
+    fn trend_ring_rotates_past_cap() {
+        let mut ring = trend_new(3);
+        for (i, steady) in [10.0, 11.0, 12.0, 13.0].iter().enumerate() {
+            let rep = mini_report(*steady, 8.0, 0.8);
+            ring = trend_append(&ring, &rep, &format!("c{i}"), 3).unwrap();
+        }
+        let entries = ring.at("entries").as_arr().unwrap();
+        assert_eq!(entries.len(), 3); // oldest (c0) rotated out
+        assert_eq!(entries[0].at("label").as_str(), Some("c1"));
+        assert_eq!(entries[2].at("label").as_str(), Some("c3"));
+        assert_eq!(entries[2].at("steady_mean_ms").as_f64(), Some(13.0));
+        // appending a non-report or into a non-ring is loud
+        assert!(trend_append(&ring, &Json::Null, "x", 3).is_err());
+        assert!(
+            trend_append(&Json::Null, &mini_report(1.0, 2.0, 0.5), "x", 3)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn trend_analyze_warns_on_monotone_drift() {
+        let mut ring = trend_new(10);
+        for (i, steady) in [10.0, 10.5, 11.0, 11.5].iter().enumerate() {
+            let rep = mini_report(*steady, 8.0, 0.8);
+            ring = trend_append(&ring, &rep, &format!("c{i}"), 10).unwrap();
+        }
+        let a = trend_analyze(&ring).unwrap();
+        assert_eq!(a.at("schema").as_str(), Some("gst-trend-analysis/v1"));
+        assert_eq!(a.at("entries").as_f64(), Some(4.0));
+        let steady = a.at("fields").at("steady_mean_ms");
+        assert_eq!(steady.at("first").as_f64(), Some(10.0));
+        assert_eq!(steady.at("last").as_f64(), Some(11.5));
+        assert_eq!(steady.at("monotone_run").as_f64(), Some(3.0));
+        let warns = a.at("warnings").as_arr().unwrap();
+        assert!(warns
+            .iter()
+            .any(|w| w.as_str().unwrap().contains("steady_mean_ms")));
+        let text = render_trend(&a);
+        assert!(text.contains("monotone drift"));
+        // a flat tail kills the warning: same series with a final plateau
+        let rep = mini_report(11.5, 8.0, 0.8);
+        let ring = trend_append(&ring, &rep, "c4", 10).unwrap();
+        let a = trend_analyze(&ring).unwrap();
+        assert!(a
+            .at("warnings")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .all(|w| !w.as_str().unwrap().contains("steady_mean_ms")));
     }
 }

@@ -288,6 +288,72 @@ mod tests {
     }
 
     #[test]
+    fn quantile_is_monotone_in_q_over_random_observations() {
+        // property: for any observation set, quantile(q) must be
+        // non-decreasing in q and bounded by [min, max] — the seeded
+        // PCG stream keeps the "random" inputs reproducible
+        let mut rng = crate::util::rng::Pcg64::new(42, 7);
+        for round in 0..5 {
+            let mut h = Histogram::staleness();
+            let n = 20 + round * 40;
+            for _ in 0..n {
+                // spread across buckets and into overflow
+                h.observe((rng.f64() * 6000.0).floor());
+            }
+            let mut prev = f64::NEG_INFINITY;
+            for i in 0..=100 {
+                let q = h.quantile(i as f64 / 100.0);
+                assert!(
+                    q >= prev,
+                    "round {round}: quantile not monotone at q={}",
+                    i as f64 / 100.0
+                );
+                assert!(
+                    (h.min()..=h.max()).contains(&q),
+                    "round {round}: q outside [min, max]"
+                );
+                prev = q;
+            }
+            assert_eq!(h.quantile(0.0), h.min());
+            assert_eq!(h.quantile(1.0), h.max());
+        }
+    }
+
+    #[test]
+    fn merge_preserves_quantile_bounds_over_random_shards() {
+        // property: merged quantiles stay inside the combined [min,
+        // max] envelope and the extremes are exactly the shard extremes
+        let mut rng = crate::util::rng::Pcg64::new(9, 3);
+        for round in 0..5 {
+            let mut merged = Histogram::staleness();
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for _ in 0..3 {
+                let mut shard = Histogram::staleness();
+                for _ in 0..(10 + round * 10) {
+                    let v = (rng.f64() * 5000.0).floor();
+                    shard.observe(v);
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                merged.merge(&shard);
+            }
+            assert_eq!(merged.min(), lo, "round {round}");
+            assert_eq!(merged.max(), hi, "round {round}");
+            for i in 0..=20 {
+                let q = merged.quantile(i as f64 / 20.0);
+                assert!(
+                    (lo..=hi).contains(&q),
+                    "round {round}: merged quantile {q} outside \
+                     [{lo}, {hi}]"
+                );
+            }
+            assert_eq!(merged.quantile(0.0), lo);
+            assert_eq!(merged.quantile(1.0), hi);
+        }
+    }
+
+    #[test]
     fn staleness_buckets_cover_powers_of_two() {
         let h = Histogram::staleness();
         // edges 0, 1, 2, 4, ..., 4096 -> 14 edges, 15 buckets

@@ -87,6 +87,23 @@ impl Phase {
     fn idx(self) -> usize {
         self as usize
     }
+
+    /// `util::sync` wait-attribution slot of this phase (the lock
+    /// wrappers are phase-agnostic; the discriminant *is* the slot, and
+    /// slot [`crate::util::sync::UNTAGGED_SLOT`] stays reserved for
+    /// waits outside any span).
+    pub fn wait_slot(self) -> usize {
+        self as usize
+    }
+
+    /// Phase name a `util::sync` wait slot aggregates under
+    /// (`"untagged"` for the out-of-span slot).
+    pub fn slot_name(slot: usize) -> &'static str {
+        match Phase::ALL.get(slot) {
+            Some(p) => p.name(),
+            None => "untagged",
+        }
+    }
 }
 
 /// Per-epoch staleness snapshot sampled from the embedding table after
@@ -332,12 +349,17 @@ impl Recorder {
             d.set(v + 1);
             v
         });
+        // charge this thread's blocked lock waits to the span's phase
+        // (restored on drop so nested spans attribute correctly)
+        let prev_wait_slot =
+            crate::util::sync::swap_wait_phase(phase.wait_slot());
         Span {
             inner: Some(SpanInner {
                 rec: self,
                 phase,
                 start: Instant::now(),
                 depth,
+                prev_wait_slot,
             }),
         }
     }
@@ -448,12 +470,15 @@ struct SpanInner<'a> {
     phase: Phase,
     start: Instant,
     depth: u32,
+    /// wait-attribution slot to restore when this span closes
+    prev_wait_slot: usize,
 }
 
 impl Drop for Span<'_> {
     fn drop(&mut self) {
         let Some(s) = self.inner.take() else { return };
         DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        crate::util::sync::swap_wait_phase(s.prev_wait_slot);
         let ns = s.start.elapsed().as_nanos() as u64;
         let i = s.phase.idx();
         s.rec.phase_ns[i].fetch_add(ns, Ordering::Relaxed);
@@ -600,6 +625,51 @@ mod tests {
             assert_eq!(WORKER.with(|w| w.get()), 0);
         }
         assert_eq!(WORKER.with(|w| w.get()), -1);
+    }
+
+    #[test]
+    fn spans_tag_lock_waits_with_their_phase() {
+        use crate::util::sync;
+        let r = Recorder::new(&ObsConfig {
+            record: true,
+            ..ObsConfig::default()
+        })
+        .unwrap();
+        assert_eq!(sync::current_wait_phase(), sync::UNTAGGED_SLOT);
+        {
+            let _grad = r.span(Phase::Grad);
+            assert_eq!(
+                sync::current_wait_phase(),
+                Phase::Grad.wait_slot()
+            );
+            {
+                let _commit = r.span(Phase::TableCommit);
+                assert_eq!(
+                    sync::current_wait_phase(),
+                    Phase::TableCommit.wait_slot()
+                );
+            }
+            assert_eq!(
+                sync::current_wait_phase(),
+                Phase::Grad.wait_slot()
+            );
+        }
+        assert_eq!(sync::current_wait_phase(), sync::UNTAGGED_SLOT);
+        // a disabled recorder never tags (its spans are inert)
+        let off = Recorder::disabled();
+        let _s = off.span(Phase::Fill);
+        assert_eq!(sync::current_wait_phase(), sync::UNTAGGED_SLOT);
+    }
+
+    #[test]
+    fn slot_names_cover_every_phase_plus_untagged() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::slot_name(p.wait_slot()), p.name());
+        }
+        assert_eq!(
+            Phase::slot_name(crate::util::sync::UNTAGGED_SLOT),
+            "untagged"
+        );
     }
 
     #[test]

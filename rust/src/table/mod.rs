@@ -70,9 +70,13 @@ impl EmbeddingTable {
     }
 
     /// Age (in steps) of the entry at `now`, or `None` if never written.
+    /// Saturating: a snapshot taken with a step counter behind a
+    /// just-committed write (`now < version`) reports age 0 instead of
+    /// wrapping to ~4e9 and poisoning the staleness histogram.
     pub fn staleness(&self, graph: usize, seg: usize, now: u32) -> Option<u32> {
         let s = self.slot(graph, seg);
-        (self.version[s] != NEVER).then(|| now - self.version[s])
+        (self.version[s] != NEVER)
+            .then(|| now.saturating_sub(self.version[s]))
     }
 
     /// InsertOrUpdate (Alg. 2 line 7): write-back after a forward pass.
@@ -118,11 +122,12 @@ impl EmbeddingTable {
 
     /// Visit the age (at `now`) of every written entry — the telemetry
     /// walk shared by [`EmbeddingTable::mean_staleness`] and the
-    /// per-epoch staleness histogram (no per-call age buffer).
+    /// per-epoch staleness histogram (no per-call age buffer). Ages
+    /// saturate at 0 like [`EmbeddingTable::staleness`].
     pub fn for_each_staleness<F: FnMut(u32)>(&self, now: u32, mut f: F) {
         for &v in &self.version {
             if v != NEVER {
-                f(now - v);
+                f(now.saturating_sub(v));
             }
         }
     }
@@ -180,6 +185,23 @@ mod tests {
         assert_eq!(t.staleness(0, 1, 25), None);
         t.put(0, 0, &[0.0; 4], 24);
         assert_eq!(t.staleness(0, 0, 25), Some(1));
+    }
+
+    #[test]
+    fn staleness_saturates_when_snapshot_lags_a_write() {
+        // regression: a snapshot taken with `now` behind a just-committed
+        // version used to wrap `now - version` to ~4e9
+        let mut t = table();
+        t.put(0, 0, &[0.0; 4], 10);
+        t.put(1, 0, &[0.0; 4], 2);
+        assert_eq!(t.staleness(0, 0, 7), Some(0));
+        let mut ages = Vec::new();
+        t.for_each_staleness(7, |age| ages.push(age));
+        ages.sort_unstable();
+        assert_eq!(ages, vec![0, 5]);
+        assert!((t.mean_staleness(7) - 2.5).abs() < 1e-9);
+        // a genuinely old entry is unaffected
+        assert_eq!(t.staleness(0, 0, 25), Some(15));
     }
 
     #[test]

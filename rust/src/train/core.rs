@@ -682,8 +682,9 @@ impl<'a, T: GstTask> GstCore<'a, T> {
 
     /// Contention section of the run report: per-lock wait/acquisition
     /// counters from the engine's and the task's timed locks, their
-    /// total, and the serial table write-back cost (the one serial
-    /// region the commit phase can't parallelize away).
+    /// total, the same waits re-aggregated by the *phase* that paid
+    /// them (`by_phase`, v3), and the serial table write-back cost (the
+    /// one serial region the commit phase can't parallelize away).
     fn contention_json(&self) -> Json {
         let mut entries = self.eng.lock_stats();
         for (name, s) in self.task.contention() {
@@ -691,6 +692,26 @@ impl<'a, T: GstTask> GstCore<'a, T> {
         }
         let total_ms: f64 =
             entries.iter().map(|(_, s)| s.wait_ms()).sum();
+        // flame attribution: sum each lock's per-slot wait split, then
+        // name the slots through the phase taxonomy
+        let mut by_slot = [0u64; crate::util::sync::PHASE_SLOTS];
+        for (_, s) in &entries {
+            for (acc, &ns) in by_slot.iter_mut().zip(&s.wait_ns_by) {
+                *acc += ns;
+            }
+        }
+        let by_phase = Json::Obj(
+            by_slot
+                .iter()
+                .enumerate()
+                .map(|(slot, &ns)| {
+                    (
+                        Phase::slot_name(slot).to_string(),
+                        Json::num(ns as f64 / 1e6),
+                    )
+                })
+                .collect(),
+        );
         Json::obj(vec![
             (
                 "locks",
@@ -702,6 +723,7 @@ impl<'a, T: GstTask> GstCore<'a, T> {
                 ),
             ),
             ("total_wait_ms", Json::num(total_ms)),
+            ("by_phase", by_phase),
             (
                 "table_writeback_ms",
                 Json::num(self.table_writeback_ns as f64 / 1e6),
@@ -709,11 +731,12 @@ impl<'a, T: GstTask> GstCore<'a, T> {
         ])
     }
 
-    /// Assemble the `gst-run-report/v2` document: run context plus every
-    /// recorder view plus engine-side accounting (v2 adds the `workers`
-    /// and `contention` sections; every v1 field is unchanged). Built
-    /// for every run — with the recorder disabled the telemetry
-    /// sections are just empty.
+    /// Assemble the `gst-run-report/v3` document: run context plus every
+    /// recorder view plus engine-side accounting (v2 added the `workers`
+    /// and `contention` sections, v3 adds `contention.by_phase`; every
+    /// earlier field is unchanged, so readers accept v1–v3). Built for
+    /// every run — with the recorder disabled the telemetry sections
+    /// are just empty.
     fn build_report(
         &self,
         train_metric: f64,
@@ -739,7 +762,7 @@ impl<'a, T: GstTask> GstCore<'a, T> {
                 .collect(),
         );
         Json::obj(vec![
-            ("schema", Json::str("gst-run-report/v2")),
+            ("schema", Json::str("gst-run-report/v3")),
             ("method", Json::str(cfg.method.name())),
             ("dataset", Json::str(&m.dataset)),
             ("backbone", Json::str(&m.backbone)),

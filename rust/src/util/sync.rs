@@ -12,7 +12,15 @@
 //! semantics (same poisoning behavior, same guards), so wrapping a lock
 //! can never change trained parameters — only explain where the wall
 //! clock went.
+//!
+//! Per-phase attribution: blocked waits are additionally charged to the
+//! thread's current *phase slot* — a thread-local index the
+//! observability layer sets when a phase span opens (`obs::Span` maps
+//! its `Phase` to a slot here; this module stays phase-agnostic so the
+//! dependency keeps pointing obs → util). Waits outside any span land
+//! in the [`UNTAGGED_SLOT`].
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{
     Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
@@ -21,6 +29,34 @@ use std::sync::{
 use std::time::Instant;
 
 use crate::util::json::Json;
+
+/// Number of phase slots blocked waits are attributed to: the 8 fixed
+/// `obs::Phase` variants plus one untagged slot.
+pub const PHASE_SLOTS: usize = 9;
+/// Slot charged when a thread blocks outside any phase span (or with
+/// the recorder disabled).
+pub const UNTAGGED_SLOT: usize = PHASE_SLOTS - 1;
+
+thread_local! {
+    /// Phase slot this thread's blocked lock waits are charged to.
+    static CUR_PHASE: Cell<usize> = Cell::new(UNTAGGED_SLOT);
+}
+
+/// Tag this thread's subsequent blocked lock waits with `slot`
+/// (clamped into range); returns the previous slot so callers can nest
+/// and restore — `obs::Span` calls this on open and drop.
+pub fn swap_wait_phase(slot: usize) -> usize {
+    CUR_PHASE.with(|c| {
+        let prev = c.get();
+        c.set(slot.min(UNTAGGED_SLOT));
+        prev
+    })
+}
+
+/// The slot currently charged on this thread (test hook).
+pub fn current_wait_phase() -> usize {
+    CUR_PHASE.with(|c| c.get())
+}
 
 /// Cumulative contention counters of one lock.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -31,6 +67,10 @@ pub struct LockStats {
     pub acquisitions: u64,
     /// Acquisitions that found the lock held and had to block.
     pub contended: u64,
+    /// `wait_ns` split by the waiter's phase slot at block time
+    /// (`obs::Phase` order, slot [`UNTAGGED_SLOT`] = outside any span);
+    /// the slots always sum to `wait_ns`.
+    pub wait_ns_by: [u64; PHASE_SLOTS],
 }
 
 impl LockStats {
@@ -53,6 +93,7 @@ struct Counters {
     wait_ns: AtomicU64,
     acquisitions: AtomicU64,
     contended: AtomicU64,
+    wait_ns_by: [AtomicU64; PHASE_SLOTS],
 }
 
 impl Counters {
@@ -61,15 +102,18 @@ impl Counters {
             wait_ns: self.wait_ns.load(Ordering::Relaxed),
             acquisitions: self.acquisitions.load(Ordering::Relaxed),
             contended: self.contended.load(Ordering::Relaxed),
+            wait_ns_by: std::array::from_fn(|i| {
+                self.wait_ns_by[i].load(Ordering::Relaxed)
+            }),
         }
     }
 
     fn blocked(&self, waited: Instant) {
+        let ns = waited.elapsed().as_nanos() as u64;
         self.contended.fetch_add(1, Ordering::Relaxed);
-        self.wait_ns.fetch_add(
-            waited.elapsed().as_nanos() as u64,
-            Ordering::Relaxed,
-        );
+        self.wait_ns.fetch_add(ns, Ordering::Relaxed);
+        self.wait_ns_by[current_wait_phase()]
+            .fetch_add(ns, Ordering::Relaxed);
     }
 }
 
@@ -237,10 +281,77 @@ mod tests {
 
     #[test]
     fn stats_serialize_to_json() {
-        let s = LockStats { wait_ns: 2_000_000, acquisitions: 9, contended: 1 };
+        let s = LockStats {
+            wait_ns: 2_000_000,
+            acquisitions: 9,
+            contended: 1,
+            ..LockStats::default()
+        };
         let j = s.to_json();
         assert_eq!(j.at("wait_ms").as_f64(), Some(2.0));
         assert_eq!(j.at("acquisitions").as_f64(), Some(9.0));
         assert_eq!(j.at("contended").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn wait_phase_tag_swaps_and_restores() {
+        assert_eq!(current_wait_phase(), UNTAGGED_SLOT);
+        let prev = swap_wait_phase(3);
+        assert_eq!(prev, UNTAGGED_SLOT);
+        assert_eq!(current_wait_phase(), 3);
+        // out-of-range slots clamp into the untagged slot
+        assert_eq!(swap_wait_phase(99), 3);
+        assert_eq!(current_wait_phase(), UNTAGGED_SLOT);
+        swap_wait_phase(prev);
+        assert_eq!(current_wait_phase(), UNTAGGED_SLOT);
+    }
+
+    #[test]
+    fn blocked_wait_is_charged_to_the_waiters_phase_slot() {
+        let m = TimedMutex::new(());
+        std::thread::scope(|scope| {
+            let g = m.lock();
+            let t = scope.spawn(|| {
+                let prev = swap_wait_phase(4);
+                drop(m.lock()); // blocks until the holder releases
+                swap_wait_phase(prev);
+            });
+            while m.stats().acquisitions < 2 {
+                std::thread::yield_now();
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            drop(g);
+            t.join().unwrap();
+        });
+        let s = m.stats();
+        assert_eq!(s.contended, 1);
+        assert!(s.wait_ns_by[4] > 0, "phase slot 4 recorded no wait");
+        for (slot, &ns) in s.wait_ns_by.iter().enumerate() {
+            if slot != 4 {
+                assert_eq!(ns, 0, "unexpected wait in slot {slot}");
+            }
+        }
+        // the split always reconciles with the total
+        assert_eq!(s.wait_ns_by.iter().sum::<u64>(), s.wait_ns);
+    }
+
+    #[test]
+    fn untagged_waits_land_in_the_untagged_slot() {
+        let l = TimedRwLock::new(0usize);
+        std::thread::scope(|scope| {
+            let g = l.read();
+            let t = scope.spawn(|| {
+                *l.write() = 1; // no phase tag on this thread
+            });
+            while l.stats().acquisitions < 2 {
+                std::thread::yield_now();
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            drop(g);
+            t.join().unwrap();
+        });
+        let s = l.stats();
+        assert!(s.wait_ns_by[UNTAGGED_SLOT] > 0);
+        assert_eq!(s.wait_ns_by.iter().sum::<u64>(), s.wait_ns);
     }
 }

@@ -202,7 +202,7 @@ fn observability_sinks_never_change_parameters() {
     // both runs carry a complete report document; the enabled run fills
     // the telemetry sections
     let rep = &r1.report;
-    assert_eq!(rep.at("schema").as_str(), Some("gst-run-report/v2"));
+    assert_eq!(rep.at("schema").as_str(), Some("gst-run-report/v3"));
     let phases = rep.at("phases").as_obj().unwrap();
     for key in [
         "step", "sample", "fill", "embed_fwd", "grad", "table_commit",
@@ -271,7 +271,7 @@ fn worker_contention_telemetry_is_execution_only() {
     assert_eq!(p0, p4, "parameters diverge with telemetry + workers");
     assert_eq!(m0, m4, "Adam moments diverge with telemetry + workers");
 
-    // the v2 report carries populated worker + contention sections
+    // the v3 report carries populated worker + contention sections
     let rep = &r4.report;
     let workers = rep.at("workers");
     assert_eq!(workers.at("count").as_f64(), Some(4.0));
@@ -296,13 +296,34 @@ fn worker_contention_telemetry_is_execution_only() {
     assert!(
         contention.at("table_writeback_ms").as_f64().unwrap() > 0.0
     );
+    // v3: lock waits split by the waiter's phase — all 9 slots present
+    // and reconciling with the total
+    let by_phase = contention.at("by_phase").as_obj().unwrap();
+    let mut split_sum = 0.0;
+    for key in [
+        "step", "sample", "fill", "embed_fwd", "grad", "table_commit",
+        "eval", "finetune", "untagged",
+    ] {
+        let ms = by_phase
+            .get(key)
+            .unwrap_or_else(|| panic!("missing by_phase slot `{key}`"))
+            .as_f64()
+            .unwrap();
+        assert!(ms >= 0.0);
+        split_sum += ms;
+    }
+    let total = contention.at("total_wait_ms").as_f64().unwrap();
+    assert!(
+        (split_sum - total).abs() < 1e-6,
+        "by_phase sums to {split_sum}, total_wait_ms {total}"
+    );
 
     // the analytics layer consumes the real report end-to-end: the
     // reader accepts it and a self-diff reports zero regressions
     let analysis = analyze::analyze_report(rep).unwrap();
     assert_eq!(
         analysis.at("source_schema").as_str(),
-        Some("gst-run-report/v2")
+        Some("gst-run-report/v3")
     );
     let diff = analyze::diff_reports(rep, rep, 20.0).unwrap();
     assert_eq!(diff.at("pass").as_bool(), Some(true));

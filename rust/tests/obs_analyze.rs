@@ -3,7 +3,10 @@
 //! hand-written 3-step, 2-worker trace whose every aggregate is known in
 //! closed form — plus gate tests over the committed CI baseline.
 
-use gst::obs::analyze::{analyze_trace, diff_reports};
+use gst::obs::analyze::{
+    analyze_trace, diff_reports, diff_traces, render_trace_diff,
+    trend_analyze,
+};
 use gst::util::json::Json;
 
 fn fixture() -> String {
@@ -12,6 +15,14 @@ fn fixture() -> String {
         "/tests/fixtures/trace_small.jsonl"
     );
     std::fs::read_to_string(path).expect("fixture trace")
+}
+
+fn regressed_fixture() -> String {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/trace_small_regressed.jsonl"
+    );
+    std::fs::read_to_string(path).expect("regressed fixture trace")
 }
 
 fn baseline() -> Json {
@@ -59,6 +70,8 @@ fn trace_analysis_matches_the_golden_fixture() {
     assert!(close(cp.at("commit_ms").as_f64().unwrap(), 0.36));
     assert!(close(cp.at("critical_ms").as_f64().unwrap(), 2.76));
     assert!(close(cp.at("stall_ms").as_f64().unwrap(), 0.29));
+    // every fixture step has a positive residual — nothing clamped
+    assert_eq!(cp.at("clamped_steps").as_f64(), Some(0.0));
 
     // span-attributed worker busy + imbalance
     let w = a.at("workers");
@@ -78,13 +91,15 @@ fn trace_analysis_matches_the_golden_fixture() {
     assert!(close(top[0].at("dominant_pct").as_f64().unwrap(), 50.0));
     assert_eq!(top[1].at("step").as_f64(), Some(0.0));
 
-    // staleness EWMA: 2.0 then 0.3·3.0 + 0.7·2.0; no drift warning
-    // (3.0 is exactly the 1.5× threshold, which must not fire)
+    // staleness EWMA: each row carries the *prior* epoch's EWMA — the
+    // baseline its mean was compared against (epoch 2's is epoch 1's
+    // seed 2.0, not the post-fold 2.3); no drift warning (3.0 is
+    // exactly the 1.5× threshold, which must not fire)
     let st = a.at("staleness");
     let eps = st.at("epochs").as_arr().unwrap();
     assert_eq!(eps.len(), 2);
     assert!(close(eps[0].at("ewma").as_f64().unwrap(), 2.0));
-    assert!(close(eps[1].at("ewma").as_f64().unwrap(), 2.3));
+    assert!(close(eps[1].at("ewma").as_f64().unwrap(), 2.0));
     assert!(st.at("warnings").as_arr().unwrap().is_empty());
 
     // SED drop-rate from cumulative counters: 0.5, then 65/120
@@ -147,4 +162,95 @@ fn injected_step_regression_fails_the_gate() {
     let regs = d.at("regressions").as_arr().unwrap();
     assert_eq!(regs.len(), 1);
     assert_eq!(regs[0].as_str(), Some("steps.steady_mean_ms"));
+}
+
+#[test]
+fn base_below_floor_blowup_fails_the_gate() {
+    // regression: with the base zeroed (below the 0.05 ms floor) a
+    // candidate at 50 ms used to sail through — no relative delta means
+    // no relative verdict, so only the absolute fallback catches it
+    let text = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/baselines/report_baseline.json"
+    ))
+    .unwrap();
+    let base = Json::parse(
+        &text.replace(
+            "\"table_writeback_ms\":10.0",
+            "\"table_writeback_ms\":0.0",
+        ),
+    )
+    .unwrap();
+    let cand = Json::parse(
+        &text.replace(
+            "\"table_writeback_ms\":10.0",
+            "\"table_writeback_ms\":50.0",
+        ),
+    )
+    .unwrap();
+    let d = diff_reports(&base, &cand, 20.0).unwrap();
+    assert_eq!(d.at("pass").as_bool(), Some(false));
+    let regs = d.at("regressions").as_arr().unwrap();
+    assert_eq!(
+        regs[0].as_str(),
+        Some("contention.table_writeback_ms")
+    );
+    // the zeroed base still self-passes
+    let d = diff_reports(&base, &base, 20.0).unwrap();
+    assert_eq!(d.at("pass").as_bool(), Some(true), "{d:?}");
+}
+
+#[test]
+fn trace_diff_localizes_the_injected_commit_slowdown() {
+    // the regressed fixture inflates table_commit in steps 4 and 8
+    // (indices 1–2) only; the diff must name exactly that range and
+    // that phase
+    let d = diff_traces(&fixture(), &regressed_fixture(), 20.0).unwrap();
+    assert_eq!(d.at("schema").as_str(), Some("gst-trace-diff/v1"));
+    assert_eq!(d.at("steps").at("compared").as_f64(), Some(3.0));
+    assert_eq!(d.at("steps").at("regressed").as_f64(), Some(2.0));
+    let hs = d.at("hotspots").as_arr().unwrap();
+    assert_eq!(hs.len(), 1);
+    assert_eq!(hs[0].at("start_step").as_f64(), Some(4.0));
+    assert_eq!(hs[0].at("end_step").as_f64(), Some(8.0));
+    assert_eq!(hs[0].at("start_index").as_f64(), Some(1.0));
+    assert_eq!(hs[0].at("end_index").as_f64(), Some(2.0));
+    assert_eq!(hs[0].at("dominant_phase").as_str(), Some("table_commit"));
+    // commit grew (700−130) + (640−110) = 1100 µs = 1.1 ms
+    assert!(close(hs[0].at("delta_ms").as_f64().unwrap(), 1.1));
+    assert!(close(
+        hs[0].at("dominant_delta_ms").as_f64().unwrap(),
+        1.1
+    ));
+    // the commit critical-path leg carries the whole delta
+    assert!(close(
+        d.at("critical_path").at("commit_delta_ms").as_f64().unwrap(),
+        1.1
+    ));
+    let text = render_trace_diff(&d);
+    assert!(text.contains("table_commit"));
+    assert!(text.contains("steps 4..8"));
+    // identical traces: nothing regressed, no hotspots
+    let d = diff_traces(&fixture(), &fixture(), 20.0).unwrap();
+    assert_eq!(d.at("steps").at("regressed").as_f64(), Some(0.0));
+    assert!(d.at("hotspots").as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn committed_trend_ring_is_analyzable() {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/baselines/trend_ring.json"
+    );
+    let ring = Json::parse(&std::fs::read_to_string(path).unwrap())
+        .expect("committed ring parses");
+    assert_eq!(ring.at("schema").as_str(), Some("gst-trend-ring/v1"));
+    let a = trend_analyze(&ring).unwrap();
+    assert_eq!(a.at("schema").as_str(), Some("gst-trend-analysis/v1"));
+    assert!(a.at("entries").as_f64().unwrap() >= 1.0);
+    // the seed entry samples the committed baseline's headline numbers
+    let steady = a.at("fields").at("steady_mean_ms");
+    assert_eq!(steady.at("first").as_f64(), Some(13.0));
+    // a single seed can never warn about drift
+    assert!(a.at("warnings").as_arr().unwrap().is_empty());
 }
